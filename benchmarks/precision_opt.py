@@ -1,0 +1,60 @@
+"""Table 4 analogue: matrix-transpose resource usage with and without the
+automatic precision optimization (+ the passes it enables)."""
+
+from __future__ import annotations
+
+from copy import deepcopy
+
+from repro.core.codegen.resources import report_module
+from repro.core.codegen.verilog import generate_verilog
+from repro.core.gallery import transpose
+from repro.core.passes import (canonicalize, constprop, cse, dce, delay_elim,
+                               precision_opt, run_pipeline, strength_reduce)
+
+PAPER = {
+    "Vivado HLS": (41, 92),
+    "Vivado HLS (manual opt)": (7, 51),
+    "HIR (no opt)": (32, 72),
+    "HIR (auto opt)": (8, 18),
+}
+
+
+def _resources(module, entry) -> dict:
+    mods = generate_verilog(module, entry)
+    tot = None
+    for vm in mods.values():
+        r = report_module(vm)
+        tot = r if tot is None else tot + r
+    return tot.as_dict()
+
+
+def run() -> list[dict]:
+    rows = []
+    m0, entry = transpose.build()
+    rows.append({"flow": "HIR (no opt)", **_resources(deepcopy(m0), entry),
+                 "paper": PAPER["HIR (no opt)"]})
+
+    m1, _ = transpose.build()
+    run_pipeline(m1)  # includes precision_opt
+    rows.append({"flow": "HIR (auto opt)", **_resources(m1, entry),
+                 "paper": PAPER["HIR (auto opt)"]})
+
+    m2, _ = transpose.build()
+    # everything except precision opt — isolates Table 4's effect
+    run_pipeline(m2, passes=[canonicalize, constprop, cse, strength_reduce,
+                             delay_elim, dce])
+    rows.append({"flow": "HIR (opt, no precision)", **_resources(m2, entry),
+                 "paper": None})
+    return rows
+
+
+def main():
+    rows = run()
+    print(f"{'flow':26s} {'LUT':>6s} {'FF':>6s}   paper(LUT,FF)")
+    for r in rows:
+        print(f"{r['flow']:26s} {r['LUT']:6d} {r['FF']:6d}   {r['paper']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

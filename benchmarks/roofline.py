@@ -1,0 +1,80 @@
+"""Roofline report: aggregates artifacts/dryrun/*.json into the
+EXPERIMENTS.md tables (per-cell three-term roofline, bottleneck, useful-FLOP
+ratio; baseline vs optimized vs kernel-substituted) and ranks hillclimb
+candidates."""
+
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load(mesh: str = "single", tag: str | None = None) -> list[dict]:
+    suffix = f"__{tag}" if tag else ""
+    rows = []
+    for f in sorted(glob.glob(str(ARTIFACTS / f"*__{mesh}{suffix}.json"))):
+        rows.append(json.loads(Path(f).read_text()))
+    return rows
+
+
+def table(rows: list[dict], opt_rows: list[dict] | None = None) -> str:
+    by_cell = {}
+    for r in opt_rows or []:
+        by_cell[(r["arch"], r["shape"])] = r
+    out = ["| arch | shape | bottleneck | compute s | memory s | collective s "
+           "| bound s | frac | useful | opt bound s | opt+kernels bound s | opt frac |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            reason = r.get("reason", r.get("error", ""))[:60]
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']}: {reason} "
+                       f"| | | | | | | | | |")
+            continue
+        t = r["roofline"]
+        uf = r.get("useful_flops_frac") or 0
+        o = by_cell.get((r["arch"], r["shape"]))
+        if o is not None and o["status"] == "ok":
+            ob = f"{o['roofline']['bound_step_time_s']:.3f}"
+            ks = o.get("roofline_kernel_substituted", {})
+            ok = f"{ks.get('bound_step_time_s', 0):.3f}"
+            of = f"{ks.get('roofline_fraction', 0):.3f}"
+        else:
+            ob = ok = of = ""
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['bottleneck']} "
+            f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+            f"| {t['collective_s']:.3f} | {t['bound_step_time_s']:.3f} "
+            f"| {t['roofline_fraction']:.3f} | {uf:.2f} | {ob} | {ok} | {of} |")
+    return "\n".join(out)
+
+
+def candidates(rows: list[dict]) -> dict:
+    ok = [r for r in rows if r["status"] == "ok" and r["kind"] in ("train", "prefill")]
+    worst_frac = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+    coll = [r for r in ok if r["roofline"]["bottleneck"] == "collective"]
+    most_coll = max(coll or ok, key=lambda r: r["roofline"]["collective_s"])
+    return {"worst_fraction": (worst_frac["arch"], worst_frac["shape"]),
+            "most_collective": (most_coll["arch"], most_coll["shape"])}
+
+
+def main():
+    for mesh in ("single", "multi"):
+        rows = load(mesh)
+        rows = [r for r in rows if not r.get("opts")]  # baselines only
+        opt_rows = load(mesh, tag="opt")
+        if not rows:
+            print(f"(no dry-run artifacts for mesh={mesh}; run repro.launch.dryrun)")
+            continue
+        print(f"== mesh: {mesh} ({len(rows)} baseline cells, "
+              f"{len(opt_rows)} optimized) ==")
+        print(table(rows, opt_rows))
+        if mesh == "single":
+            print("hillclimb candidates:", candidates(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark orchestrator — one module per paper table plus the roofline
+report mandated by the assignment:
+
+  codegen_speed    paper Table 6 (HIR vs HLS codegen time)
+  resource_usage   paper Table 5 (LUT/FF/DSP/BRAM per kernel)
+  precision_opt    paper Table 4 (precision-opt ablation)
+  roofline         EXPERIMENTS §Roofline source (reads dry-run artifacts)
+
+``python -m benchmarks.run [name ...]`` runs all (or the named) benchmarks
+and writes artifacts/bench/<name>.json.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    from . import (codegen_scaling, codegen_speed, precision_opt,
+                   resource_usage, roofline)
+
+    suites = {
+        "codegen_speed": codegen_speed,
+        "codegen_scaling": codegen_scaling,
+        "resource_usage": resource_usage,
+        "precision_opt": precision_opt,
+        "roofline": roofline,
+    }
+    names = argv or list(suites)
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    for name in names:
+        mod = suites[name]
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        rows = mod.main()
+        dt = time.time() - t0
+        print(f"({name}: {dt:.1f}s)")
+        if rows and not isinstance(rows, int):
+            (ARTIFACTS / f"{name}.json").write_text(
+                json.dumps(rows, indent=2, default=str))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

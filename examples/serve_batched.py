@@ -1,0 +1,25 @@
+"""Batched serving example: continuous batching over decode slots.
+
+Serves synthetic requests against a smoke-scale model using the production
+serving engine (per-lane cache positions; wave refill for recurrent archs).
+
+    PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --arch mamba2-780m
+"""
+
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    defaults = ["--smoke", "--requests", "10", "--slots", "4",
+                "--max-new", "12", "--prompt-len", "6", "--max-len", "96"]
+    if not any(a.startswith("--arch") for a in argv):
+        defaults = ["--arch", "tinyllama-1.1b"] + defaults
+    return serve_main(defaults + argv)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

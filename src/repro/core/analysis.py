@@ -1,0 +1,193 @@
+"""Schedule analyses shared by the verifier, the codegen and the HLS
+baseline: initiation intervals, iteration latencies, loop/function latency
+bounds, and access tables per memref port.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from . import ir
+from .ir import ForOp, FuncOp, Operation, Region, Time, Value
+
+
+@dataclass
+class LoopInfo:
+    op: ForOp
+    ii: Optional[int]  # constant initiation interval, None if data-dependent
+    trip: Optional[int]  # constant trip count, None if dynamic
+    body_span: int  # max completion offset of body ops relative to %ti
+    total_latency: Optional[int]  # cycles from loop start to %tf, if static
+
+    @property
+    def pipelined(self) -> bool:
+        return self.ii is not None and self.ii < self.body_span
+
+
+def op_completion_offset(op: Operation, root: Value, loops: dict[ForOp, "LoopInfo"]) -> Optional[int]:
+    """Completion cycle of ``op`` relative to time variable ``root``; None if
+    it is not statically tied to ``root``."""
+    if op.start is None or op.start.tv is not root:
+        return None
+    base = op.start.offset
+    if op.opname == "mem_read":
+        mt = op.operands[0].type
+        return base + mt.read_latency()
+    if op.opname == "mem_write":
+        return base + 1  # writes take one cycle (paper §4.1)
+    if op.opname == "delay":
+        return base + op.attrs["by"]
+    if op.opname == "call":
+        ds = op.attrs.get("result_delays", ())
+        return base + (max(ds) if ds else 0)
+    if op.opname in ("for", "unroll_for"):
+        li = loops.get(op)  # type: ignore[arg-type]
+        if li is None or li.total_latency is None:
+            return None
+        return base + li.total_latency
+    if op.opname in ir.ARITH_OPS:
+        return base + op.attrs.get("stages", 0)
+    return base
+
+
+def analyze_loops(func: FuncOp) -> dict[ForOp, LoopInfo]:
+    """Bottom-up loop analysis: II, trip count, body span, total latency."""
+    loops: dict[ForOp, LoopInfo] = {}
+
+    def visit_region(region: Region) -> None:
+        for op in region.ops:
+            for r in op.regions:
+                visit_region(r)
+            if isinstance(op, ForOp):
+                loops[op] = _analyze_loop(op, loops)
+
+    def _analyze_loop(op: ForOp, loops: dict[ForOp, LoopInfo]) -> LoopInfo:
+        root = op.time_var
+        trip = op.trip_count()
+        span = 0
+        for inner in op.region(0).ops:
+            c = op_completion_offset(inner, root, loops)
+            if c is not None:
+                span = max(span, c)
+            # ops chained off an inner loop's end time extend the span too
+            elif inner.start is not None and inner.start.tv.defining_op in loops:
+                fop: ForOp = inner.start.tv.defining_op  # type: ignore[assignment]
+                li = loops[fop]
+                if li.total_latency is not None and fop.start is not None and fop.start.tv is root:
+                    c2 = op_completion_offset(inner, inner.start.tv, loops)
+                    if c2 is not None:
+                        span = max(span, fop.start.offset + li.total_latency + c2)
+        y = op.yield_op()
+        ii: Optional[int] = None
+        seq_iter_len: Optional[int] = None
+        if y is not None and y.start is not None:
+            if y.start.tv is root:
+                ii = y.start.offset
+            else:
+                # sequential loop: yield chained off an inner loop's end time
+                d = y.start.tv.defining_op
+                if isinstance(d, ForOp) and d in loops and d.start is not None and d.start.tv is root:
+                    li = loops[d]
+                    if li.total_latency is not None:
+                        seq_iter_len = d.start.offset + li.total_latency + y.start.offset
+        if op.opname == "unroll_for":
+            # all iterations replicated in space; ii is the per-iteration time
+            # stagger (0 = fully parallel).
+            ii = ii if ii is not None else 0
+            total = None if trip is None else (trip * ii + span if trip else 0)
+            return LoopInfo(op, ii, trip, span, total)
+        total: Optional[int] = None
+        if trip is not None:
+            if ii is not None:
+                total = trip * ii
+            elif seq_iter_len is not None:
+                total = trip * seq_iter_len
+        return LoopInfo(op, ii if ii is not None else seq_iter_len, trip, span, total)
+
+    visit_region(func.body)
+    return loops
+
+
+def func_latency(func: FuncOp, loops: Optional[dict[ForOp, LoopInfo]] = None) -> Optional[int]:
+    """Static latency (cycles from %t to all effects complete), if derivable."""
+    loops = loops if loops is not None else analyze_loops(func)
+    root = func.time_var
+    worst = 0
+    derived_roots: dict[Value, Optional[int]] = {root: 0}
+
+    # two passes to resolve chains of derived time variables
+    for _ in range(2):
+        for op in func.body.walk():
+            if op.opname == "time":
+                base = derived_roots.get(op.operands[0])
+                if base is not None:
+                    derived_roots[op.result] = base + op.attrs.get("offset", 0)
+            if isinstance(op, ForOp):
+                li = loops[op]
+                if op.start is not None and op.start.tv in derived_roots and li.total_latency is not None:
+                    b = derived_roots[op.start.tv]
+                    if b is not None:
+                        derived_roots[op.end_time] = b + op.start.offset + li.total_latency
+
+    for op in func.body.walk():
+        if op.start is None:
+            continue
+        base = derived_roots.get(op.start.tv)
+        if base is None:
+            # op scheduled relative to a loop-local or unknown time var;
+            # loop spans are already accounted for via total_latency.
+            continue
+        local_root = op.start.tv
+        c = op_completion_offset(op, local_root, loops)
+        if c is None:
+            return None
+        # for loops: completion already includes total; body spans beyond II
+        if isinstance(op, ForOp):
+            li = loops[op]
+            if li.total_latency is None:
+                return None
+            extra = max(0, li.body_span - (li.ii or 0))
+            worst = max(worst, base + op.start.offset + li.total_latency + extra)
+        else:
+            worst = max(worst, base + c)
+    return worst
+
+
+@dataclass
+class MemAccess:
+    op: Operation
+    is_write: bool
+    port_value: Value  # the memref SSA value (= the port)
+    offsets_mod: Optional[tuple[int, int]]  # (offset mod II, II) within pipelined loop
+    offset: Optional[int]  # absolute offset under its root tv
+    root: Value
+
+
+def collect_port_accesses(func: FuncOp, loops: dict[ForOp, LoopInfo]) -> dict[Value, list[MemAccess]]:
+    """Group memory accesses by memref port value, annotated with their
+    schedule congruence class (offset mod II inside pipelined loops)."""
+    out: dict[Value, list[MemAccess]] = {}
+
+    def visit(region: Region, encl: Optional[ForOp]) -> None:
+        for op in region.ops:
+            if op.opname in ("mem_read", "mem_write"):
+                port = op.operands[0] if op.opname == "mem_read" else op.operands[1]
+                acc = MemAccess(
+                    op,
+                    op.opname == "mem_write",
+                    port,
+                    None,
+                    op.start.offset if op.start is not None else None,
+                    op.start.tv if op.start is not None else func.time_var,
+                )
+                if encl is not None and op.start is not None and op.start.tv is encl.time_var:
+                    li = loops[encl]
+                    if li.ii is not None and li.ii > 0 and li.pipelined:
+                        acc.offsets_mod = (op.start.offset % li.ii, li.ii)
+                out.setdefault(port, []).append(acc)
+            for r in op.regions:
+                visit(r, op if isinstance(op, ForOp) else encl)
+
+    visit(func.body, None)
+    return out

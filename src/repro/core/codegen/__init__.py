@@ -1,0 +1,2 @@
+from .verilog import VerilogModule, generate_verilog  # noqa: F401
+from .resources import ResourceReport, estimate_resources  # noqa: F401

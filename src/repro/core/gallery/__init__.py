@@ -1,0 +1,25 @@
+"""The paper's benchmark kernels (§8, Tables 5–6) written in HIR:
+
+  matrix transpose, 1-d stencil, histogram, GEMM (systolic array),
+  2-d convolution, FIFO — plus the paper's two running examples
+  (array-add, multiply-accumulate) in correct and deliberately-broken
+  versions for the verifier tests (Figs. 1 and 2).
+
+Each module exposes ``build()`` -> (Module, entry_name) and ``oracle(...)``
+(NumPy reference).  ``GALLERY`` maps kernel name -> module.
+"""
+
+from . import array_add, conv2d, fifo, gemm, histogram, mac, stencil1d, transpose
+
+GALLERY = {
+    "transpose": transpose,
+    "stencil1d": stencil1d,
+    "histogram": histogram,
+    "gemm": gemm,
+    "conv2d": conv2d,
+    "fifo": fifo,
+    "array_add": array_add,
+    "mac": mac,
+}
+
+PAPER_BENCHMARKS = ["transpose", "stencil1d", "histogram", "gemm", "conv2d", "fifo"]

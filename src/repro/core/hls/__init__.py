@@ -1,0 +1,2 @@
+from .eraser import erase_schedule  # noqa: F401
+from .scheduler import HLSResult, hls_compile, hls_schedule  # noqa: F401

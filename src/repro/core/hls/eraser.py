@@ -1,0 +1,57 @@
+"""Schedule eraser: strips all scheduling information from an HIR design,
+producing the *algorithm-only* input an HLS compiler starts from.
+
+  * every op's ``at``-clause is dropped,
+  * ``hir.delay`` ops (pure schedule artifacts) are removed and forwarded,
+  * ``hir.yield`` times are dropped (the scheduler will pick the II),
+  * loop ``iter_time`` offsets are dropped.
+
+Used by the codegen-speed benchmark (paper Table 6): the HIR pipeline only
+*verifies* the explicit schedule, while the HLS pipeline must *search* for
+one starting from the erased design."""
+
+from __future__ import annotations
+
+from .. import ir
+from ..ir import ForOp, Module, Operation, Region, replace_all_uses
+from ..parser import parse
+from ..printer import print_module
+
+
+def erase_schedule(module: Module) -> Module:
+    """Returns a fresh unscheduled copy (the original is untouched)."""
+    m = parse(print_module(module))  # deep copy via round-trip
+    for f in m.funcs.values():
+        if f.attrs.get("external"):
+            continue
+
+        def order_key(op: Operation):
+            # Textual order becomes the semantic (sequential-C) order the HLS
+            # compiler starts from, so first rewrite each region into the
+            # original *schedule* order: reads before writes on cycle ties
+            # (the hardware read-phase samples pre-write state).
+            if op.opname in ("constant", "alloc"):
+                return (-1, 0)
+            if op.start is None:
+                return (1 << 30, 0)
+            return (op.start.offset, 0 if op.opname == "mem_read" else 1)
+
+        def strip(region: Region) -> None:
+            region.ops.sort(key=order_key)
+            keep = []
+            for op in region.ops:
+                if op.opname == "delay":
+                    replace_all_uses(f.body, op.result, op.operands[0])
+                    continue
+                op.start = None
+                for r in op.results:
+                    r.birth = None
+                if isinstance(op, ForOp):
+                    op.attrs["iter_arg_offset"] = 0
+                for r in op.regions:
+                    strip(r)
+                keep.append(op)
+            region.ops[:] = keep
+
+        strip(f.body)
+    return m

@@ -1,0 +1,72 @@
+"""HIR optimization passes (paper §6.2–§6.4).
+
+  * canonicalize        — constant folding + commutative-operand ordering
+  * constprop           — compile-time constant propagation
+  * cse                 — common-subexpression elimination on pure ops
+  * strength_reduce     — const-mult -> shift/add; IV*const -> counter
+  * precision_opt       — bitwidth narrowing from loop-bound range analysis
+  * delay_elim          — shift-register sharing/chaining, zero-delay removal
+  * port_demotion       — dual-port -> single-port RAM when schedules are
+                          provably disjoint (paper §2 "Ease of optimization")
+  * dce                 — dead pure-op removal
+  * unroll              — full expansion of hir.unroll_for (pre-codegen)
+
+``run_pipeline(module)`` applies the default optimization pipeline in the
+order used for the paper-benchmark evaluation.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from ..ir import Module
+from .canonicalize import canonicalize, constprop, dce
+from .cse import cse
+from .delay_elim import delay_elim
+from .port_demotion import port_demotion
+from .precision_opt import precision_opt
+from .strength_reduce import strength_reduce
+from .inline import inline_calls
+from .unroll import unroll_loops
+
+DEFAULT_PIPELINE: list[Callable[[Module], int]] = [
+    canonicalize,
+    constprop,
+    cse,
+    strength_reduce,
+    precision_opt,
+    delay_elim,
+    port_demotion,
+    dce,
+]
+
+
+def run_pipeline(module: Module, passes: Optional[list[Callable[[Module], int]]] = None,
+                 max_iters: int = 3) -> dict[str, int]:
+    """Run passes to a fixpoint (bounded); returns per-pass rewrite counts."""
+    stats: dict[str, int] = {}
+    for _ in range(max_iters):
+        changed = 0
+        for p in passes or DEFAULT_PIPELINE:
+            n = p(module)
+            stats[p.__name__] = stats.get(p.__name__, 0) + n
+            changed += n
+        if changed == 0:
+            break
+    return stats
+
+
+__all__ = [
+    "run_pipeline",
+    "DEFAULT_PIPELINE",
+    "canonicalize",
+    "constprop",
+    "cse",
+    "strength_reduce",
+    "precision_opt",
+    "delay_elim",
+    "port_demotion",
+    "dce",
+    "unroll_loops",
+    "inline_calls",
+]

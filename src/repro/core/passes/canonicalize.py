@@ -1,0 +1,142 @@
+"""Canonicalization, constant propagation and DCE (paper §6.2)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from .. import ir
+from ..ir import ForOp, FuncOp, Module, Operation, Region, Value, const_value, replace_all_uses
+
+
+def _fold(opname: str, vals: list) -> Optional[int]:
+    try:
+        if opname == "add":
+            return vals[0] + vals[1]
+        if opname == "sub":
+            return vals[0] - vals[1]
+        if opname == "mult":
+            return vals[0] * vals[1]
+        if opname == "div":
+            return vals[0] // vals[1]
+        if opname == "and":
+            return vals[0] & vals[1]
+        if opname == "or":
+            return vals[0] | vals[1]
+        if opname == "xor":
+            return vals[0] ^ vals[1]
+        if opname == "shl":
+            return vals[0] << vals[1]
+        if opname == "shr":
+            return vals[0] >> vals[1]
+        if opname.startswith("cmp_"):
+            import operator
+
+            f = {"lt": operator.lt, "le": operator.le, "eq": operator.eq,
+                 "ne": operator.ne, "gt": operator.gt, "ge": operator.ge}[opname[4:]]
+            return int(f(vals[0], vals[1]))
+        if opname == "select":
+            return vals[1] if vals[0] else vals[2]
+        if opname in ("trunc", "zext", "sext", "not"):
+            return ~vals[0] if opname == "not" else vals[0]
+    except Exception:
+        return None
+    return None
+
+
+def _each_func(module: Module):
+    for f in module.funcs.values():
+        if not f.attrs.get("external"):
+            yield f
+
+
+def canonicalize(module: Module) -> int:
+    """Order commutative operands by SSA id (enables CSE); fold identities
+    (x+0, x*1, x*0)."""
+    n = 0
+    for f in _each_func(module):
+        for op in f.body.walk():
+            if op.opname in ir.COMMUTATIVE_OPS and len(op.operands) == 2:
+                # canonical operand order: constants last (LLVM-style), then
+                # by SSA id — stable form enables CSE and the identity folds
+                a, b = op.operands
+                ka = (const_value(a) is not None, a.id)
+                kb = (const_value(b) is not None, b.id)
+                if ka > kb:
+                    op.operands[0], op.operands[1] = b, a
+                    n += 1
+            # identity folds
+            if op.opname in ("add", "sub", "shl", "shr", "or", "xor") and len(op.operands) == 2:
+                cb = const_value(op.operands[1])
+                if cb == 0 and op.results:
+                    replace_all_uses(f.body, op.result, op.operands[0])
+                    n += 1
+            elif op.opname == "mult" and op.results:
+                for i in (0, 1):
+                    c = const_value(op.operands[i])
+                    if c == 1:
+                        replace_all_uses(f.body, op.result, op.operands[1 - i])
+                        n += 1
+                        break
+    return n
+
+
+def constprop(module: Module) -> int:
+    """Fold pure ops whose operands are all compile-time constants."""
+    n = 0
+    for f in _each_func(module):
+        changed = True
+        while changed:
+            changed = False
+            for op in list(f.body.walk()):
+                if op.opname not in ir.ARITH_OPS or not op.results:
+                    continue
+                vals = [const_value(v) for v in op.operands]
+                if any(v is None for v in vals):
+                    continue
+                folded = _fold(op.opname, vals)
+                if folded is None:
+                    continue
+                cst = ir.constant(folded, ir.CONST)
+                region = op.parent_region or f.body
+                region.ops.insert(region.ops.index(op), cst)
+                cst.parent_region = region
+                replace_all_uses(f.body, op.result, cst.result)
+                region.ops.remove(op)  # the folded op is dead: drop it now so
+                # the fixpoint loop terminates instead of refolding it forever
+                changed = True
+                n += 1
+    return n
+
+
+def _is_pure(op: Operation) -> bool:
+    return op.opname in ir.ARITH_OPS or op.opname in ("constant", "delay")
+
+
+def dce(module: Module) -> int:
+    """Remove pure ops whose results are unused."""
+    n = 0
+    for f in _each_func(module):
+        changed = True
+        while changed:
+            changed = False
+            used: set[int] = set()
+            for op in f.body.walk():
+                for v in op.operands:
+                    used.add(v.id)
+            # returns/yields handled above (operands); function results too
+
+            def sweep(region: Region) -> None:
+                nonlocal n, changed
+                keep = []
+                for op in region.ops:
+                    if _is_pure(op) and op.results and all(r.id not in used for r in op.results):
+                        changed = True
+                        n += 1
+                        continue
+                    for r in op.regions:
+                        sweep(r)
+                    keep.append(op)
+                region.ops[:] = keep
+
+            sweep(f.body)
+    return n

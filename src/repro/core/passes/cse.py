@@ -1,0 +1,55 @@
+"""Common-subexpression elimination (paper §6.2).
+
+Combinational ops are time-free wires, so two arith ops with identical
+(opname, operands, attrs) compute the same signal regardless of their
+schedule annotation and can share hardware.  Delays additionally require the
+same source *and* the same depth (partial sharing of shift-register chains is
+done by ``delay_elim``)."""
+
+from __future__ import annotations
+
+from .. import ir
+from ..ir import Module, Operation, Region, replace_all_uses
+
+
+def _key(op: Operation):
+    if op.opname in ir.ARITH_OPS:
+        stages = op.attrs.get("stages", 0)
+        if stages:
+            # pipelined units also need identical schedules to share
+            st = (op.start.tv.id, op.start.offset) if op.start is not None else None
+            return ("arith", op.opname, tuple(v.id for v in op.operands), stages, st)
+        return ("arith", op.opname, tuple(v.id for v in op.operands), 0, None)
+    if op.opname == "delay":
+        return ("delay", op.operands[0].id, op.attrs["by"])
+    if op.opname == "constant":
+        return ("const", str(op.result.type), op.attrs["value"])
+    return None
+
+
+def cse(module: Module) -> int:
+    n = 0
+    for f in module.funcs.values():
+        if f.attrs.get("external"):
+            continue
+
+        def run(region: Region, seen: dict) -> None:
+            nonlocal n
+            keep = []
+            for op in region.ops:
+                k = _key(op)
+                if k is not None and op.results:
+                    if k in seen:
+                        replace_all_uses(f.body, op.result, seen[k])
+                        n += 1
+                        continue
+                    seen[k] = op.result
+                for r in op.regions:
+                    # nested scopes may reuse outer expressions but not
+                    # vice versa: pass a child view of the map
+                    run(r, dict(seen))
+                keep.append(op)
+            region.ops[:] = keep
+
+        run(f.body, {})
+    return n

@@ -1,0 +1,75 @@
+"""Strength reduction (paper §6.2).
+
+  * ``x * 2^k``   -> ``x << k``                       (free in hardware)
+  * ``x * c``     -> shift-add decomposition when c has <= 3 set bits
+                    (marked ``impl="shift_add"`` — costed as adders, 0 DSPs;
+                    this is how the paper's convolution uses no DSP blocks)
+  * ``iv * c``    -> marked ``impl="counter"``: the loop controller maintains
+                    a scaled running counter (adder) instead of a multiplier —
+                    the paper's "multiplication between loop induction
+                    variables and constants" rewrite.
+  * ``x / 2^k``   -> ``x >> k``
+"""
+
+from __future__ import annotations
+
+from .. import ir
+from ..ir import ForOp, Module, Operation, const_value, replace_all_uses
+
+
+def _popcount(c: int) -> int:
+    return bin(c).count("1")
+
+
+def _is_loop_iv(v) -> bool:
+    # region args have no defining op; check loop membership via name match
+    return v.defining_op is None
+
+
+def strength_reduce(module: Module) -> int:
+    n = 0
+    for f in module.funcs.values():
+        if f.attrs.get("external"):
+            continue
+        ivs = set()
+        for op in f.body.walk():
+            if isinstance(op, ForOp):
+                ivs.add(op.iv)
+        for op in f.body.walk():
+            if op.opname == "mult" and not op.attrs.get("impl"):
+                for i in (0, 1):
+                    c = const_value(op.operands[i])
+                    x = op.operands[1 - i]
+                    if c is None or not isinstance(c, int) or c <= 0:
+                        continue
+                    if x in ivs and x.type != ir.CONST:
+                        op.attrs["impl"] = "counter"  # scaled loop counter
+                        n += 1
+                        break
+                    if c & (c - 1) == 0:  # power of two -> shl
+                        k = c.bit_length() - 1
+                        op.opname = "shl"
+                        cst = ir.constant(k, ir.CONST)
+                        region = op.parent_region or f.body
+                        region.ops.insert(region.ops.index(op), cst)
+                        cst.parent_region = region
+                        op.operands[:] = [x, cst.result]
+                        n += 1
+                        break
+                    if _popcount(c) <= 3:  # few-term shift-add
+                        op.attrs["impl"] = "shift_add"
+                        op.attrs["terms"] = _popcount(c)
+                        n += 1
+                        break
+            elif op.opname == "div" and not op.attrs.get("impl"):
+                c = const_value(op.operands[1])
+                if isinstance(c, int) and c > 0 and c & (c - 1) == 0:
+                    k = c.bit_length() - 1
+                    op.opname = "shr"
+                    cst = ir.constant(k, ir.CONST)
+                    region = op.parent_region or f.body
+                    region.ops.insert(region.ops.index(op), cst)
+                    cst.parent_region = region
+                    op.operands[:] = [op.operands[0], cst.result]
+                    n += 1
+    return n

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU).
+
+  matmul            blocked MXU matmul (the paper's systolic GEMM binding)
+  flash_attention   causal/windowed flash attention
+  decode_attention  flash-decode + cross-shard partial merging
+  ssd_scan          Mamba-2 SSD chunked scan
+  rglru_scan        RG-LRU diagonal recurrence (blocked doubling scan)
+
+Use via ``repro.kernels.ops`` (jit'd, padding, layout adaptation).
+"""
+
+from . import ops  # noqa: F401
+from .ref import (  # noqa: F401
+    decode_attention_ref,
+    flash_attention_ref,
+    matmul_ref,
+    rglru_scan_ref,
+    ssd_scan_ref,
+)

@@ -1,0 +1,124 @@
+"""Flash-decode: single-token attention against a long KV cache.
+
+Grid: (B, H, L/bk) — the cache length dim is innermost/sequential and the
+online-softmax state is carried in VMEM scratch.  For the sequence-sharded
+cache of the production decode configs, ``partial_decode_attention`` also
+returns the per-shard (m, l) statistics so shards merge with one small
+all-gather (``merge_partials``) instead of all-gathering the cache — the
+collective payload drops from O(L·D) to O(D + 2).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out, l_out,
+                   acc_ref, m_ref, l_ref, *,
+                   scale: float, bk: int, kv_steps: int, normalize: bool):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # (1, D)
+    k = k_ref[0, 0].astype(jnp.float32)                      # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, bk)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    s = jnp.where(k_pos < len_ref[0], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p, v_ref[0, 0].astype(jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _done():
+        if normalize:
+            o_ref[0, 0] = (acc_ref[...] /
+                           jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        else:
+            o_ref[0, 0] = acc_ref[...].astype(o_ref.dtype)
+        m_out[0, 0] = m_ref[...]
+        l_out[0, 0] = l_ref[...]
+
+
+def _call(q, k, v, length, scale, bk, normalize, interpret):
+    B, H, D = q.shape
+    _, L, KvH, _ = k.shape
+    assert H % KvH == 0
+    group = H // KvH
+    bk = min(bk, L)
+    kt = jnp.swapaxes(k, 1, 2)   # (B, KvH, L, D)
+    vt = jnp.swapaxes(v, 1, 2)
+    grid = (B, H, L // bk)
+    qe = q[:, :, None, :]        # (B, H, 1, D)
+    sc = scale if scale is not None else D ** -0.5
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+    out, m, l = pl.pallas_call(
+        partial(_decode_kernel, scale=sc, bk=bk, kv_steps=grid[2],
+                normalize=normalize),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+            jax.ShapeDtypeStruct((B, H, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, 1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, qe, kt, vt)
+    return out[:, :, 0, :], m[:, :, 0, 0], l[:, :, 0, 0]
+
+
+def decode_attention(q, k, v, length, *, scale: Optional[float] = None,
+                     bk: int = 512, interpret: bool = False):
+    """q: (B,H,D); k,v: (B,L,KvH,D); positions >= length are masked."""
+    out, _, _ = _call(q, k, v, length, scale, bk, True, interpret)
+    return out
+
+
+def partial_decode_attention(q, k, v, length, *, scale: Optional[float] = None,
+                             bk: int = 512, interpret: bool = False):
+    """Unnormalised partial result + (m, l) for cross-shard merging."""
+    return _call(q, k, v, length, scale, bk, False, interpret)
+
+
+def merge_partials(outs, ms, ls):
+    """Merge per-shard partial attention (stacked on axis 0):
+    outs (S,B,H,D) unnormalised, ms/ls (S,B,H).  Standard flash-decode
+    log-sum-exp combination."""
+    m = jnp.max(ms, axis=0)
+    corr = jnp.exp(ms - m[None])                        # (S,B,H)
+    l = jnp.sum(ls * corr, axis=0)
+    o = jnp.sum(outs.astype(jnp.float32) * corr[..., None], axis=0)
+    return (o / jnp.maximum(l[..., None], 1e-30)).astype(outs.dtype)

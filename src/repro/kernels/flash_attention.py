@@ -1,0 +1,98 @@
+"""Flash attention (causal / sliding-window) as a Pallas TPU kernel.
+
+Grid: (B, H, Sq/bq, Sk/bk) with the KV dim innermost (sequential on TPU), so
+the online-softmax state (acc, m, l) lives in VMEM scratch across KV steps —
+the HIR idiom of a pipelined loop carrying state through schedule-checked
+delays maps to scratch carried across sequential grid steps.
+
+Masking is computed from block indices with iota (never materialised in HBM
+— this is exactly the mask-traffic the roofline analysis flags in the pure-
+jnp lowering).  GQA is handled by the wrapper (`ops.mha`) which maps KV heads
+to query-head groups in the index_map, so KV blocks are never replicated in
+memory.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  bq: int, bk: int, kv_steps: int):
+    qi, ki = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        valid &= k_pos <= q_pos
+    if window is not None:
+        valid &= k_pos > q_pos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == kv_steps - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 256, bk: int = 256,
+                    interpret: bool = False):
+    """q: (B, H, Sq, D); k,v: (B, KvH, Sk, D) with H % KvH == 0.
+    Sq/Sk must tile by bq/bk (``ops.mha`` pads)."""
+    B, H, Sq, D = q.shape
+    _, KvH, Sk, _ = k.shape
+    assert H % KvH == 0, (H, KvH)
+    group = H // KvH
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    sc = scale if scale is not None else D ** -0.5
+    grid = (B, H, Sq // bq, Sk // bk)
+    return pl.pallas_call(
+        partial(_flash_kernel, scale=sc, causal=causal, window=window,
+                bq=bq, bk=bk, kv_steps=grid[3]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth its kernel is tested against
+(``tests/kernels`` sweeps shapes/dtypes in interpret mode and
+``assert_allclose``es against these)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None, scale: Optional[float] = None):
+    """q,k,v: (B, H, S, D) (kernel layout).  fp32 softmax."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    sc = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * sc
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    valid = jnp.ones((Sq, Sk), bool)
+    if causal:
+        valid &= k_pos <= q_pos
+    if window is not None:
+        valid &= k_pos > q_pos - window
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, length, *, scale: Optional[float] = None):
+    """q: (B, H, D) one token; k,v: (B, L, H, D) cache; ``length``: number of
+    valid cache entries (positions < length attend)."""
+    B, H, D = q.shape
+    L = k.shape[1]
+    sc = scale if scale is not None else D ** -0.5
+    s = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32), k.astype(jnp.float32)) * sc
+    valid = jnp.arange(L)[None, None, :] < length
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhl,blhd->bhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ssd_scan_ref(xdt, dA, Bc, Cc, h0=None):
+    """Sequential SSD recurrence (chunk-free ground truth).
+
+    xdt: (B,S,H,P) dt-weighted inputs; dA: (B,S,H) negative decay logs;
+    Bc/Cc: (B,S,N).  h_t = exp(dA_t) h_{t-1} + B_t (xdt_t)^T;
+    y_t = C_t . h_t.  Returns (y (B,S,H,P), hT (B,H,N,P))."""
+    B, S, H, P = xdt.shape
+    N = Bc.shape[-1]
+    h = (jnp.zeros((B, H, N, P), jnp.float32) if h0 is None else h0.astype(jnp.float32))
+
+    def step(h, t):
+        a = jnp.exp(dA[:, t].astype(jnp.float32))            # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", Bc[:, t].astype(jnp.float32),
+                         xdt[:, t].astype(jnp.float32))
+        h = h * a[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cc[:, t].astype(jnp.float32), h)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(xdt.dtype), h
+
+
+def rglru_scan_ref(a, b, h0=None):
+    """Diagonal linear recurrence h_t = a_t * h_{t-1} + b_t.
+    a, b: (B, S, D); returns (h (B,S,D), hT (B,D))."""
+    h = jnp.zeros_like(a[:, 0]) if h0 is None else h0
+
+    def step(h, t):
+        h = a[:, t] * h + b[:, t]
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h.astype(jnp.float32),
+                          jnp.arange(a.shape[1]))
+    return jnp.moveaxis(hs, 0, 1).astype(a.dtype), hT
+
+
+def stencil1d_ref(x, w):
+    """Causal windowed weighted sum: y[i] = sum_j w[j] * x[i+j] (valid run:
+    len(x)-len(w)+1 outputs) — the paper's stencil benchmark semantics."""
+    W = w.shape[0]
+    S = x.shape[0] - W + 1
+    return sum(x[i:i + S] * w[i] for i in range(W))

@@ -1,0 +1,84 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+The state-space-duality insight (quadratic-in-chunk attention form + linear
+inter-chunk recurrence) maps onto the MXU exactly like the paper's systolic
+GEMM maps onto HIR's banked unroll loops: each (batch, head) cell walks the
+chunk grid sequentially, computing three MXU matmuls per chunk
+
+    CB    = C_q  B_s^T                (Q x Q)
+    intra = (CB . decay) (x dt)       (Q x P)
+    inter = (C . exp(cum)) h          (Q x P)
+    h'    = decay_T h + (B . w)^T x dt
+
+with the running state h (N x P, f32) carried in VMEM scratch across the
+sequential chunk dim — the Pallas analogue of HIR's cross-iteration delay
+registers.
+
+Layouts: x (B,H,nc,Q,P); dA (B,H,nc,Q); Bc/Cc (B,nc,Q,N) shared across
+heads.  ``ops.ssd_scan`` reshapes from the model's (B,S,H,P) layout.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dA_ref, b_ref, c_ref, y_ref, h_ref, *, Q: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)        # (Q, P)
+    dA = dA_ref[0, 0, 0].astype(jnp.float32)      # (Q,)
+    B = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+
+    cum = jnp.cumsum(dA)                          # (Q,)
+    # intra-chunk: masked decay-weighted attention form
+    seg = cum[:, None] - cum[None, :]             # (Q, Q) log-decay q<-s
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))     # (Q, Q)
+    y_intra = jax.lax.dot(cb * decay, x)                          # (Q, P)
+
+    # inter-chunk: contribution of the carried state
+    c_in = C * jnp.exp(cum)[:, None]                              # (Q, N)
+    y_inter = jax.lax.dot(c_in, h_ref[...])                       # (Q, P)
+
+    y_ref[0, 0, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update: h' = exp(cum_last) h + (B . exp(cum_last - cum))^T x
+    last = cum[Q - 1]
+    w = jnp.exp(last - cum)[:, None]                              # (Q, 1)
+    upd = jax.lax.dot_general(B * w, x, (((0,), (0,)), ((), ()))) # (N, P)
+    h_ref[...] = jnp.exp(last) * h_ref[...] + upd
+
+
+def ssd_scan(x, dA, Bc, Cc, *, interpret: bool = False):
+    """x: (B,H,nc,Q,P); dA: (B,H,nc,Q); Bc,Cc: (B,nc,Q,N).
+    Returns y: (B,H,nc,Q,P)."""
+    Bb, H, nc, Q, P = x.shape
+    N = Bc.shape[-1]
+    grid = (Bb, H, nc)
+    return pl.pallas_call(
+        partial(_ssd_kernel, Q=Q),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dA, Bc, Cc)

@@ -1,0 +1,226 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory / cost / collective analyses.
+
+MUST be the first import in the process (jax locks the device count on first
+init) — hence the os.environ lines above everything else.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs.base import SHAPES, ModelCfg, ShapeCfg
+from ..configs.registry import cell_supported, get_config, list_archs
+from ..launch import hlo_analysis
+from ..launch.mesh import make_production_mesh
+from ..launch.specs import cell_abstract_inputs
+from ..optim.adamw import OptCfg
+from ..parallel.api import use_rules
+from ..parallel.rules import rules_for
+from ..train.steps import make_prefill_step, make_serve_step, make_train_step
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# per-device activation budget used to pick gradient-accumulation depth
+ACT_BUDGET_BYTES = 4e9
+
+
+def microbatches_for(cfg: ModelCfg, shape: ShapeCfg, mesh) -> int:
+    """Boundary activations of the layer scan dominate train memory:
+    L x (B/mb/dp) x S x d x 2B per device.  Choose the smallest microbatch
+    count (a divisor of B/dp) that fits the budget."""
+    if shape.kind != "train":
+        return 1
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    if shape.global_batch % dp:
+        dp = 1
+    per_mb = cfg.n_layers * shape.seq_len * cfg.d_model * 2 * (shape.global_batch / dp)
+    mb = 1
+    max_mb = max(1, shape.global_batch // dp)
+    while per_mb / mb > ACT_BUDGET_BYTES and mb < max_mb:
+        mb *= 2
+    return min(mb, max_mb)
+
+
+def build_step(cfg: ModelCfg, shape: ShapeCfg, mesh, num_microbatches: int,
+               opts: dict):
+    if shape.kind == "train":
+        return make_train_step(cfg, OptCfg(), num_microbatches=num_microbatches,
+                               mesh=mesh,
+                               constrain_grads=opts.get("constrain_grads", False),
+                               grad_compression=opts.get("grad_compression"))
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_serve_step(cfg)
+
+
+# beyond-baseline optimizations (EXPERIMENTS.md §Perf); "opt" enables all
+OPT_KEYS = ("moe_ep", "seq_shard_fallback", "no_embed_fsdp", "constrain_grads",
+            "flash_decode")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             donate: bool = True, verbose: bool = True,
+             opts: dict | None = None) -> dict:
+    opts = opts or {}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    ok, reason = cell_supported(cfg, shape)
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind,
+    }
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    mode = "train" if shape.kind == "train" else shape.kind
+    num_mb = microbatches_for(cfg, shape, mesh)
+    rules = rules_for(cfg, mesh, mode, batch=shape.global_batch // num_mb,
+                      moe_ep=opts.get("moe_ep", False),
+                      seq_shard_fallback=opts.get("seq_shard_fallback", False),
+                      embed_fsdp=not opts.get("no_embed_fsdp", False),
+                      flash_decode=opts.get("flash_decode", False))
+    enabled = {k: v for k, v in opts.items() if v}
+    if enabled:
+        rec["opts"] = enabled
+    t0 = time.time()
+    try:
+        with use_rules(rules, mesh):
+            args, in_sh, out_sh = cell_abstract_inputs(cfg, shape, rules, mesh,
+                                                       num_microbatches=num_mb)
+            step = build_step(cfg, shape, mesh, num_mb, opts)
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            with mesh:
+                lowered = jitted.lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+
+                mem = compiled.memory_analysis()
+                cost = compiled.cost_analysis()
+                hlo = compiled.as_text()
+        st = hlo_analysis.analyze(hlo)   # loop-aware per-chip accounting
+        flops_pc, bytes_pc, coll_pc = st.flops, st.mem_bytes, st.coll_bytes
+        terms = hlo_analysis.roofline_terms(flops_pc, bytes_pc, coll_pc)
+        # kernel-substituted terms: each pallas_kernel.* region replaced by
+        # its boundary I/O (the in-repo Pallas kernel's actual HBM traffic),
+        # plus the bf16-dot dtype correction (XLA:CPU upcasts bf16 dots to
+        # f32; the TPU MXU does not)
+        terms_ks = hlo_analysis.roofline_terms(
+            flops_pc, st.mem_bytes_tpu_adjusted, coll_pc)
+        mf = hlo_analysis.model_flops(cfg, shape)
+        rec.update(
+            status="ok",
+            chips=n_chips,
+            num_microbatches=num_mb,
+            rules={k: v for k, v in rules.rules.items() if v is not None},
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0),
+            },
+            cost={
+                "flops_per_chip": flops_pc,
+                "bytes_per_chip": bytes_pc,
+                "total_flops": flops_pc * n_chips,
+                "xla_cost_flops_body_once": float(cost.get("flops", 0.0)),
+            },
+            collectives={
+                "operand_bytes": coll_pc,
+                "count": st.coll_count,
+                "bytes_by_kind": st.coll_by_kind,
+                "unknown_trip_whiles": st.unknown_trip_whiles,
+            },
+            roofline=terms,
+            roofline_kernel_substituted=dict(
+                terms_ks,
+                marked_mem_bytes=st.marked_mem,
+                boundary_bytes=st.marked_boundary,
+            ),
+            model_flops=mf,
+            useful_flops_frac=(mf / (flops_pc * n_chips)) if flops_pc else None,
+        )
+        if verbose:
+            frac = rec["useful_flops_frac"]
+            print(f"[{arch} x {shape_name} x {mesh_name}] OK "
+                  f"compile={t_compile:.1f}s flops/chip={flops_pc:.3e} "
+                  f"coll={coll_pc:.3e}B bottleneck={terms['bottleneck']} "
+                  f"useful={frac:.2f}" if frac is not None else "")
+    except Exception as e:  # record the failure; the dry-run table shows it
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] FAIL {type(e).__name__}: {e}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="architecture id (see --list)")
+    ap.add_argument("--shape", default=None, choices=[*SHAPES, None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all (arch x shape) cells")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    ap.add_argument("--opt", action="store_true",
+                    help="enable every beyond-baseline optimization")
+    for k in OPT_KEYS:
+        ap.add_argument(f"--{k.replace('_', '-')}", action="store_true")
+    ap.add_argument("--grad-compression", choices=["int8"], default=None)
+    ap.add_argument("--tag", default=None,
+                    help="artifact filename suffix (default: 'opt' when any opt on)")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for a in list_archs():
+            print(a)
+        return 0
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "multi"]
+
+    opts = {k: (args.opt or getattr(args, k)) for k in OPT_KEYS}
+    if args.grad_compression:
+        opts["grad_compression"] = args.grad_compression
+    any_opt = any(opts.values())
+    tag = args.tag or ("opt" if any_opt else None)
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, opts=opts)
+                suffix = f"__{tag}" if tag else ""
+                name = f"{arch}__{shape}__{'multi' if mp else 'single'}{suffix}.json"
+                (outdir / name).write_text(json.dumps(rec, indent=2, default=str))
+                n_fail += rec["status"] == "error"
+    print(f"done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

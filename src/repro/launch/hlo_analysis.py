@@ -1,0 +1,347 @@
+"""Post-SPMD HLO analysis: loop-aware FLOP / byte / collective accounting
+and the three roofline terms.
+
+Why not just ``compiled.cost_analysis()``: XLA's cost analysis counts a
+``while`` body ONCE, so a lax.scan over 100 layers under-reports FLOPs and
+collective traffic by 100x.  We parse the optimized (partitioned) HLO text
+into its computation graph, multiply through ``known_trip_count`` from each
+while's backend_config, and traverse fusion/call/conditional edges:
+
+  * FLOPs        — 2 * prod(result_dims) * prod(contracting_dims) per dot
+                   (matmuls dominate; elementwise is excluded and noted);
+  * collective   — operand bytes of all-gather / all-reduce / reduce-scatter
+                   / all-to-all / collective-permute (per-shard = per-chip
+                   wire bytes in the partitioned module);
+  * memory       — operand+result bytes of every non-trivial instruction at
+                   fusion granularity (fusion internals do not touch HBM).
+
+All figures are per-chip (the SPMD module is the per-device program).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast", "ragged-all-to-all")
+
+_TYPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*?)\s+([a-z][a-z0-9\-]*)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_MARK_RE = re.compile(r'op_name="[^"]*pallas_kernel\.')
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+# opcodes that move no HBM bytes of their own
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+             "after-all", "add-dependency", "custom-call", "partition-id",
+             "replica-id", "iota"}
+
+
+def _shape_of(fragment: str) -> tuple[str, tuple[int, ...]]:
+    m = _TYPE_RE.search(fragment)
+    if m is None:
+        return "opaque", ()
+    dims = tuple(int(x) for x in m.group(2).split(",") if x)
+    return m.group(1), dims
+
+
+def _bytes_of(fragment: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(fragment):
+        n = _DTYPE_BYTES.get(dt, 0)
+        for d in (x for x in dims.split(",") if x):
+            n *= int(d)
+        total += n
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    result: str       # result type fragment
+    opcode: str
+    operands: list[str]
+    line: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _bytes_of(self.result)
+
+
+@dataclass
+class Stats:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    coll_count: int = 0
+    unknown_trip_whiles: int = 0
+    # kernel-substitution accounting: HBM bytes attributable to instructions
+    # inside a ``pallas_kernel.*`` named_scope, and the boundary I/O of those
+    # regions (what the fused Pallas kernel would actually read/write)
+    marked_mem: float = 0.0
+    marked_boundary: float = 0.0
+    # XLA:CPU emits every bf16 dot as convert-to-f32 + f32 dot; on TPU the
+    # MXU consumes bf16 operands directly.  ``dot_mem`` tracks the f32-counted
+    # dot operand/result bytes so the TPU-dtype correction can halve them.
+    dot_mem: float = 0.0
+    unmarked_dot_mem: float = 0.0
+
+    def add(self, other: "Stats", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.mem_bytes += other.mem_bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        self.coll_count += int(other.coll_count * mult)
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+        self.marked_mem += other.marked_mem * mult
+        self.marked_boundary += other.marked_boundary * mult
+        self.dot_mem += other.dot_mem * mult
+        self.unmarked_dot_mem += other.unmarked_dot_mem * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * mult
+
+    @property
+    def mem_bytes_kernel_substituted(self) -> float:
+        """Memory traffic with every marked region replaced by its boundary
+        I/O — the traffic of the program when each ``pallas_kernel.*`` region
+        compiles to its (in-repo, interpret-validated) Pallas kernel."""
+        return self.mem_bytes - self.marked_mem + self.marked_boundary
+
+    @property
+    def mem_bytes_tpu_adjusted(self) -> float:
+        """Kernel substitution + bf16-dot dtype correction: the dot
+        operand/result traffic outside marked regions counted at bf16 width
+        (the CPU backend's f32 upcast does not exist on the MXU)."""
+        return self.mem_bytes_kernel_substituted - 0.5 * self.unmarked_dot_mem
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self.symbols: dict[str, dict[str, Instr]] = {
+            c: {i.name: i for i in instrs} for c, instrs in self.comps.items()}
+        self._memo: dict[str, Stats] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_RE.match(line)
+                if m and line.rstrip().endswith("{"):
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m is None:
+                continue
+            name, result, opcode = m.groups()
+            # operand names: inside the first balanced parens after opcode
+            rest = line[m.end():]
+            depth, j = 1, 0
+            for j, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            operands = _OPERAND_RE.findall(rest[:j])
+            self.comps[cur].append(Instr(name, result, opcode, operands, line))
+
+    # ------------------------------------------------------------------
+    def _operand_bytes(self, comp: str, instr: Instr) -> int:
+        table = self.symbols[comp]
+        total = 0
+        for o in instr.operands:
+            src = table.get(o)
+            if src is not None:
+                total += src.result_bytes
+        return total
+
+    def _dot_flops(self, comp: str, instr: Instr) -> float:
+        _, rdims = _shape_of(instr.result)
+        out = 1.0
+        for d in rdims:
+            out *= d
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+        contract = 1.0
+        if m and instr.operands:
+            lhs = self.symbols[comp].get(instr.operands[0])
+            if lhs is not None:
+                _, ldims = _shape_of(lhs.result)
+                for ax in (int(x) for x in m.group(1).split(",") if x):
+                    if ax < len(ldims):
+                        contract *= ldims[ax]
+        return 2.0 * out * contract
+
+    def stats(self, comp: Optional[str] = None, in_marked: bool = False) -> Stats:
+        comp = comp or self.entry
+        key = (comp, in_marked)
+        if key in self._memo:
+            return self._memo[key]
+        s = Stats()
+        self._memo[key] = s  # guards (non-recursive HLO anyway)
+        table = self.symbols[comp]
+
+        def is_marked(i: Instr) -> bool:
+            return in_marked or bool(_MARK_RE.search(i.line))
+
+        def account_mem(ins: Instr, bytes_: float) -> None:
+            s.mem_bytes += bytes_
+            if is_marked(ins):
+                s.marked_mem += bytes_
+                # boundary reads: operands produced by unmarked instructions
+                bnd = 0
+                for o in ins.operands:
+                    src = table.get(o)
+                    if src is not None and not is_marked(src):
+                        bnd += src.result_bytes
+                s.marked_boundary += bnd
+            else:
+                # boundary writes: this unmarked instr reads marked results
+                bnd = 0
+                for o in ins.operands:
+                    src = table.get(o)
+                    if src is not None and is_marked(src):
+                        bnd += src.result_bytes
+                s.marked_boundary += bnd
+
+        for ins in self.comps.get(comp, ()):
+            op = ins.opcode
+            if op == "dot":
+                s.flops += self._dot_flops(comp, ins)
+                b = ins.result_bytes + self._operand_bytes(comp, ins)
+                account_mem(ins, b)
+                if "f32[" in ins.result:
+                    s.dot_mem += b
+                    if not is_marked(ins):
+                        s.unmarked_dot_mem += b
+                continue
+            base = next((c for c in COLLECTIVES
+                         if op == c or op.startswith(c + "-")), None)
+            if base is not None and not op.endswith("-done"):
+                b = self._operand_bytes(comp, ins)
+                s.coll_bytes += b
+                s.coll_count += 1
+                s.coll_by_kind[base] = s.coll_by_kind.get(base, 0.0) + b
+                account_mem(ins, ins.result_bytes + b)
+                continue
+            if op == "while":
+                m = _TRIP_RE.search(ins.line)
+                trip = int(m.group(1)) if m else 1
+                if m is None:
+                    s.unknown_trip_whiles += 1
+                body = _BODY_RE.search(ins.line)
+                if body:
+                    s.add(self.stats(body.group(1), is_marked(ins)), trip)
+                if is_marked(ins) and not in_marked:
+                    # the carried tuple crosses the kernel boundary once
+                    s.marked_boundary += ins.result_bytes
+                continue
+            if op == "conditional":
+                m = _BRANCHES_RE.search(ins.line)
+                if m:
+                    for b in _OPERAND_RE.findall(m.group(1)):
+                        s.add(self.stats(b, is_marked(ins)), 1.0)
+                continue
+            if op in ("fusion", "call", "async-start"):
+                c = _CALLS_RE.search(ins.line)
+                if c is not None:
+                    sub = self.stats(c.group(1), is_marked(ins))
+                    # fusion internals: FLOPs + collectives count, HBM does not
+                    s.flops += sub.flops
+                    s.coll_bytes += sub.coll_bytes
+                    s.coll_count += sub.coll_count
+                    for k, v in sub.coll_by_kind.items():
+                        s.coll_by_kind[k] = s.coll_by_kind.get(k, 0.0) + v
+                account_mem(ins, ins.result_bytes + self._operand_bytes(comp, ins))
+                continue
+            if op in _FREE_OPS:
+                continue
+            account_mem(ins, ins.result_bytes + self._operand_bytes(comp, ins))
+        return s
+
+
+def analyze(hlo_text: str) -> Stats:
+    return HloModule(hlo_text).stats()
+
+
+# ---------------------------------------------------------------------------
+# roofline terms (TPU v5e constants per the assignment)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link (assignment constant)
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float) -> dict:
+    t_c = flops_per_chip / PEAK_FLOPS
+    t_m = bytes_per_chip / HBM_BW
+    t_x = coll_bytes_per_chip / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    hard_bound = max(t_c, t_m, t_x)
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "bottleneck": dom[0],
+        "bound_step_time_s": hard_bound,
+        "roofline_fraction": (t_c / hard_bound) if hard_bound else None,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N_active*D for train, 2*N_active*D forward-only
+    (D = tokens processed; decode processes one token per sequence)."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_params(cfg) -> float:
+    """Parameters touched per token (MoE: top_k of n_routed experts).
+    Routed-expert tensors are identified by the expert dim E in the first two
+    axes of a >=3-d stacked leaf ((layers, E, d, ff) / (E, d, ff))."""
+    import jax
+
+    from ..launch.specs import params_shapes
+
+    shapes = params_shapes(cfg)
+    E = cfg.moe.n_routed if cfg.moe is not None else None
+    total = 0.0
+    for leaf in jax.tree.leaves(shapes):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        if E is not None and len(leaf.shape) >= 3 and E in leaf.shape[:2]:
+            n = n * cfg.moe.top_k / E
+        total += n
+    return float(total)

@@ -1,0 +1,123 @@
+"""ShapeDtypeStruct stand-ins + NamedShardings for every (arch x shape) cell.
+
+``input_specs`` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable, zero device allocation — the dry-run lowers and compiles against
+these without materialising a single parameter."""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelCfg, ShapeCfg
+from ..models import transformer
+from ..optim.adamw import init_opt_state, opt_state_specs
+from ..parallel.api import ShardingRules
+from ..train.steps import init_train_state
+
+
+def _is_spec_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+
+
+def tree_shardings(spec_tree, shape_tree, rules: ShardingRules, mesh: Mesh):
+    """Resolve a logical-axis spec tree into NamedShardings, enforcing
+    structural equality with the shape tree."""
+    flat_specs, sdef = jax.tree.flatten(spec_tree, is_leaf=_is_spec_leaf)
+    flat_shapes, vdef = jax.tree.flatten(shape_tree)
+    assert sdef == vdef, f"spec/shape tree mismatch:\n{sdef}\nvs\n{vdef}"
+    out = []
+    for sp, shp in zip(flat_specs, flat_shapes):
+        assert len(sp) == len(shp.shape), (sp, shp.shape)
+        out.append(NamedSharding(mesh, rules.resolve(sp)))
+    return jax.tree.unflatten(vdef, out)
+
+
+def abstractify(tree, shardings=None):
+    """ShapeDtypeStructs (optionally sharded) for a shape-tree."""
+    if shardings is None:
+        return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# per-cell input specs
+# ---------------------------------------------------------------------------
+
+
+def state_shapes(cfg: ModelCfg):
+    return jax.eval_shape(lambda: init_train_state(jax.random.key(0), cfg))
+
+
+def params_shapes(cfg: ModelCfg):
+    return jax.eval_shape(lambda: transformer.init_lm(jax.random.key(0), cfg))
+
+
+def cache_shapes(cfg: ModelCfg, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: transformer.init_lm_cache(
+        cfg, batch, seq_len, memory_tokens=cfg.frontend_tokens))
+
+
+def batch_specs(cfg: ModelCfg, shape: ShapeCfg) -> dict[str, Any]:
+    """Logical specs + ShapeDtypeStructs for the data batch of a cell."""
+    B, S = shape.global_batch, shape.seq_len
+    shapes: dict[str, Any] = {}
+    specs: dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        shapes["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["tokens"] = ("batch", "seq")
+        if shape.kind == "train":
+            shapes["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            specs["labels"] = ("batch", "seq")
+    if cfg.frontend is not None and shape.kind in ("train", "prefill"):
+        shapes["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+        specs["frontend_embeds"] = ("batch", None, None)
+    return {"shapes": shapes, "specs": specs}
+
+
+def cell_abstract_inputs(cfg: ModelCfg, shape: ShapeCfg, rules: ShardingRules,
+                         mesh: Mesh, num_microbatches: int = 1):
+    """(abstract_args, in_shardings, out_shardings_hint) for the step function
+    of a cell.  ``abstract_args`` is a tuple matching the step signature."""
+    if shape.kind == "train":
+        st = state_shapes(cfg)
+        pspecs = transformer.specs_lm(cfg)
+        sspecs = {"params": pspecs, "opt": opt_state_specs(pspecs)}
+        st_sh = tree_shardings(sspecs, st, rules, mesh)
+        bs = batch_specs(cfg, shape)
+        b_sh = tree_shardings(bs["specs"], bs["shapes"], rules, mesh)
+        args = (abstractify(st, st_sh), abstractify(bs["shapes"], b_sh))
+        in_sh = (st_sh, b_sh)
+        out_sh = (st_sh, None)  # metrics replicated
+        return args, in_sh, out_sh
+    if shape.kind == "prefill":
+        ps = params_shapes(cfg)
+        p_sh = tree_shardings(transformer.specs_lm(cfg), ps, rules, mesh)
+        bs = batch_specs(cfg, shape)
+        b_sh = tree_shardings(bs["specs"], bs["shapes"], rules, mesh)
+        args = (abstractify(ps, p_sh), abstractify(bs["shapes"], b_sh))
+        # logits: huge (B,S,V) — keep sharded over batch and vocab
+        logits_sh = NamedSharding(mesh, rules.resolve(("batch", "seq", "vocab")))
+        return args, (p_sh, b_sh), logits_sh
+    if shape.kind == "decode":
+        B = shape.global_batch
+        ps = params_shapes(cfg)
+        p_sh = tree_shardings(transformer.specs_lm(cfg), ps, rules, mesh)
+        cs = cache_shapes(cfg, B, shape.seq_len)
+        c_sh = tree_shardings(transformer.specs_lm_cache(cfg), cs, rules, mesh)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_sh = NamedSharding(mesh, rules.resolve(("batch", None)))
+        idx = jax.ShapeDtypeStruct((), jnp.int32)
+        idx_sh = NamedSharding(mesh, P())
+        args = (abstractify(ps, p_sh), abstractify(cs, c_sh),
+                jax.ShapeDtypeStruct(tok.shape, tok.dtype, sharding=tok_sh),
+                jax.ShapeDtypeStruct(idx.shape, idx.dtype, sharding=idx_sh))
+        return args, (p_sh, c_sh, tok_sh, idx_sh), (tok_sh, c_sh)
+    raise ValueError(shape.kind)

@@ -1,0 +1,113 @@
+"""Shared model components: norms, rope, activations, initializers.
+
+All modules in ``repro.models`` follow one convention: ``init_*(key, cfg)``
+returns a params dict; a sibling ``specs_*(cfg)`` returns a dict of identical
+structure whose leaves are tuples of *logical axis names* (resolved to mesh
+axes by ``repro.parallel``).  Structure equality is enforced by tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.api import shard
+
+# ---------------------------------------------------------------------------
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "float16": jnp.float16}[name]
+
+
+def ninit(key, shape, scale: float = 0.02, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps: float = 1e-6, plus_one: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (y * w).astype(x.dtype)
+
+
+def init_norm(d: int):
+    return {"scale": ones((d,))}
+
+
+def specs_norm():
+    return {"scale": (None,)}
+
+
+# -- rope ---------------------------------------------------------------------
+
+
+def rope_freqs(d_head: int, theta: float, rope_dim: Optional[int] = None):
+    rd = rope_dim or d_head
+    inv = 1.0 / (theta ** (np.arange(0, rd, 2, dtype=np.float64) / rd))
+    return jnp.asarray(inv, jnp.float32)  # (rd/2,)
+
+
+def apply_rope(x, positions, theta: float, rope_dim: Optional[int] = None):
+    """x: (..., S, H, Dh) or (..., S, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    rd = rope_dim or dh
+    inv = rope_freqs(dh, theta, rd)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, rd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    if x.ndim == ang.ndim + 1:  # head axis present
+        sin, cos = sin[..., None, :], cos[..., None, :]
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    ro = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).reshape(xr.shape)
+    if rd < dh:
+        ro = jnp.concatenate([ro, x[..., rd:].astype(jnp.float32)], axis=-1)
+    return ro.astype(x.dtype)
+
+
+# -- activations -----------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+            "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True)}[name]
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def _named_scope(name):
+    """Mark a kernel-eligible region for the roofline's kernel-substitution
+    accounting (launch.hlo_analysis): on TPU this region lowers to the
+    corresponding Pallas kernel in ``repro.kernels``."""
+    import functools
+
+    import jax
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(*a, **k):
+            with jax.named_scope(name):
+                return fn(*a, **k)
+        return wrapped
+    return deco

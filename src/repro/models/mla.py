@@ -1,0 +1,197 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed into a rank-``kv_lora_rank`` latent ``c_kv`` plus a shared
+rotary key ``k_pe`` (rope_head_dim); per-head keys/values are decompressed on
+the fly.  The decode cache stores only (c_kv, k_pe) — the paper's 93% KV-cache
+reduction — and decompression folds into the attention einsum ("weight
+absorption") so decode never materialises per-head K/V."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelCfg
+from ..parallel.api import shard
+from .common import _named_scope, apply_rope, ninit
+from .attention import NEG_INF
+
+
+def init_mla(key, cfg: ModelCfg):
+    a = cfg.attn
+    d = cfg.d_model
+    H = a.n_heads
+    ks = jax.random.split(key, 8)
+    qd = a.nope_head_dim + a.rope_head_dim
+    p = {
+        "w_dkv": ninit(ks[0], (d, a.kv_lora_rank)),           # down-proj to latent
+        "w_kpe": ninit(ks[1], (d, a.rope_head_dim)),          # shared rotary key
+        "w_uk": ninit(ks[2], (a.kv_lora_rank, H, a.nope_head_dim)),
+        "w_uv": ninit(ks[3], (a.kv_lora_rank, H, a.v_head_dim)),
+        "wo": ninit(ks[4], (H, a.v_head_dim, d), scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+        "kv_norm": jnp.ones((a.kv_lora_rank,), jnp.float32),
+    }
+    if a.q_lora_rank:
+        p["w_dq"] = ninit(ks[5], (d, a.q_lora_rank))
+        p["w_uq"] = ninit(ks[6], (a.q_lora_rank, H, qd))
+        p["q_norm"] = jnp.ones((a.q_lora_rank,), jnp.float32)
+    else:
+        p["wq"] = ninit(ks[7], (d, H, qd))
+    return p
+
+
+def specs_mla(cfg: ModelCfg):
+    a = cfg.attn
+    p = {
+        "w_dkv": ("embed_tp", None),
+        "w_kpe": ("embed_tp", None),
+        "w_uk": (None, "heads", None),
+        "w_uv": (None, "heads", None),
+        "wo": ("heads", None, "embed_tp"),
+        "kv_norm": (None,),
+    }
+    if a.q_lora_rank:
+        p["w_dq"] = ("embed_tp", None)
+        p["w_uq"] = (None, "heads", None)
+        p["q_norm"] = (None,)
+    else:
+        p["wq"] = ("embed_tp", "heads", None)
+    return p
+
+
+def _rms(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * w).astype(x.dtype)
+
+
+def _queries(p, x, cfg: ModelCfg, positions):
+    a = cfg.attn
+    if a.q_lora_rank:
+        cq = _rms(jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), p["q_norm"])
+        q = jnp.einsum("bsr,rhe->bshe", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    q_nope, q_pe = q[..., : a.nope_head_dim], q[..., a.nope_head_dim:]
+    q_pe = apply_rope(q_pe, positions, a.rope_theta)
+    return q_nope, q_pe
+
+
+def mla_forward(p, x, cfg: ModelCfg, positions=None):
+    """Training/prefill path: decompress K/V and run standard causal MHA."""
+    a = cfg.attn
+    B, S, D = x.shape
+    pos = positions if positions is not None else jnp.arange(S)[None, :].repeat(B, 0)
+    q_nope, q_pe = _queries(p, x, cfg, pos)
+
+    c_kv = _rms(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"])
+    k_pe = apply_rope(jnp.einsum("bsd,de->bse", x, p["w_kpe"]), pos, a.rope_theta)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"])
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"])
+
+    scale = (a.nope_head_dim + a.rope_head_dim) ** -0.5
+    s = jnp.einsum("bqhe,bkhe->bhqk", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+    s = s + jnp.einsum("bqhe,bke->bhqk", q_pe.astype(jnp.float32), k_pe.astype(jnp.float32))
+    s = s * scale
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhe->bqhe", prob, v.astype(jnp.float32)).astype(x.dtype)
+    o = shard(o, "batch", "seq", "heads", None)
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+@_named_scope("pallas_kernel.mla_flash")
+def mla_forward_chunked(p, x, cfg: ModelCfg, positions=None, kv_chunk: int = 1024):
+    """Flash-style MLA for long sequences: online softmax over latent chunks,
+    with queries absorbed into the latent space (q~ = q W_uk) so the chunk
+    working set is rank-r, not H*Dh."""
+    a = cfg.attn
+    B, S, D = x.shape
+    pos = positions if positions is not None else jnp.arange(S)[None, :].repeat(B, 0)
+    q_nope, q_pe = _queries(p, x, cfg, pos)
+    c_kv = _rms(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"]), p["kv_norm"])
+    k_pe = apply_rope(jnp.einsum("bsd,de->bse", x, p["w_kpe"]), pos, a.rope_theta)
+
+    # absorb: q~ (B,S,H,r) = q_nope @ w_uk^T
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"]).astype(jnp.float32)
+    scale = (a.nope_head_dim + a.rope_head_dim) ** -0.5
+
+    n = -(-S // kv_chunk)
+    pad = n * kv_chunk - S
+    ckv_p = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))).reshape(B, n, kv_chunk, -1)
+    kpe_p = jnp.pad(k_pe, ((0, 0), (0, pad), (0, 0))).reshape(B, n, kv_chunk, -1)
+    q_pos = jnp.arange(S)
+
+    def step(carry, ci):
+        acc, m, l = carry
+        cb = ckv_p[:, ci].astype(jnp.float32)
+        kb = kpe_p[:, ci].astype(jnp.float32)
+        s = jnp.einsum("bshr,bkr->bshk", q_abs, cb)
+        s = s + jnp.einsum("bshe,bke->bshk", q_pe.astype(jnp.float32), kb)
+        s = s * scale
+        kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        valid = (kv_pos < S)[None, None, None, :] & (kv_pos[None, :] <= q_pos[:, None])[None, :, None, :]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        pr = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + pr.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bshk,bkr->bshr", pr, cb)
+        return (acc_new, m_new, l_new), None
+
+    H = a.n_heads
+    r = a.kv_lora_rank
+    acc0 = jnp.zeros((B, S, H, r), jnp.float32)
+    m0 = jnp.full((B, S, H), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, H), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), jnp.arange(n))
+    o_lat = acc / jnp.maximum(l[..., None], 1e-30)           # (B,S,H,r)
+    o = jnp.einsum("bshr,rhe->bshe", o_lat.astype(x.dtype), p["w_uv"])
+    return jnp.einsum("bshe,hed->bsd", o, p["wo"])
+
+
+# -- decode -----------------------------------------------------------------
+
+
+def init_mla_cache(batch: int, seq_len: int, cfg: ModelCfg):
+    from .common import dtype_of
+
+    a = cfg.attn
+    dt = dtype_of(cfg.dtype)
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, a.kv_lora_rank), dt),
+        "k_pe": jnp.zeros((batch, seq_len, a.rope_head_dim), dt),
+    }
+
+
+def specs_mla_cache():
+    return {"c_kv": ("batch", "kv_seq", None), "k_pe": ("batch", "kv_seq", None)}
+
+
+def mla_decode_step(p, x1, cache, index, cfg: ModelCfg):
+    """Weight-absorbed MLA decode: attention runs entirely in the latent
+    space against the compressed cache.  ``index``: scalar or per-lane (B,)."""
+    a = cfg.attn
+    B = x1.shape[0]
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32), (B,))
+    pos = idx[:, None]
+    q_nope, q_pe = _queries(p, x1, cfg, pos)
+    c1 = _rms(jnp.einsum("bsd,dr->bsr", x1, p["w_dkv"]), p["kv_norm"])
+    kpe1 = apply_rope(jnp.einsum("bsd,de->bse", x1, p["w_kpe"]), pos, a.rope_theta)
+    lane = jnp.arange(B)
+    c_kv = cache["c_kv"].at[lane, idx].set(c1[:, 0].astype(cache["c_kv"].dtype))
+    k_pe = cache["k_pe"].at[lane, idx].set(kpe1[:, 0].astype(cache["k_pe"].dtype))
+
+    q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["w_uk"]).astype(jnp.float32)
+    scale = (a.nope_head_dim + a.rope_head_dim) ** -0.5
+    s = jnp.einsum("bshr,bkr->bshk", q_abs, c_kv.astype(jnp.float32))
+    s = s + jnp.einsum("bshe,bke->bshk", q_pe.astype(jnp.float32), k_pe.astype(jnp.float32))
+    s = s * scale
+    valid = jnp.arange(c_kv.shape[1])[None, :] <= idx[:, None]      # (B,L)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bshk,bkr->bshr", prob, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bshr,rhe->bshe", o_lat.astype(x1.dtype), p["w_uv"])
+    out = jnp.einsum("bshe,hed->bsd", o, p["wo"])
+    return out, {"c_kv": c_kv, "k_pe": k_pe}

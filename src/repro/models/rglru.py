@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a u_t)                 (recurrence gate)
+    i_t = sigmoid(W_x u_t)                 (input gate)
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t . h_{t-1} + sqrt(1 - a_t^2) . (i_t . u_t)
+
+The diagonal recurrence is evaluated with a parallel associative scan over
+(a, b) pairs; decode keeps (h, conv window) state.  The full recurrent block
+is: dual linear branches -> short depthwise causal conv -> RG-LRU -> gated
+output projection."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelCfg
+from ..parallel.api import shard
+from .common import _named_scope, ninit
+
+
+def _d_rnn(cfg: ModelCfg) -> int:
+    return cfg.rglru.d_rnn or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelCfg):
+    d = cfg.d_model
+    dr = _d_rnn(cfg)
+    w = cfg.rglru.conv_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": ninit(ks[0], (d, dr)),          # recurrent branch in-proj
+        "w_y": ninit(ks[1], (d, dr)),          # gate branch in-proj
+        "conv_w": ninit(ks[2], (w, dr), scale=0.1),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_a": ninit(ks[3], (dr, dr), scale=0.01, dtype=jnp.float32),
+        "w_i": ninit(ks[4], (dr, dr), scale=0.01, dtype=jnp.float32),
+        "lam": jnp.full((dr,), 0.5, jnp.float32),   # Lambda (learned decay)
+        "w_o": ninit(ks[5], (dr, d), scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def specs_rglru(cfg: ModelCfg):
+    return {
+        "w_x": ("embed_tp", "ff"), "w_y": ("embed_tp", "ff"),
+        "conv_w": (None, "ff"), "conv_b": ("ff",),
+        "w_a": ("ff", "ff2"), "w_i": ("ff", "ff2"),
+        "lam": ("ff",),
+        "w_o": ("ff", "embed_tp"),
+    }
+
+
+def _causal_conv(u, w, b, state=None):
+    """Depthwise causal conv; u: (B,S,C), w: (W,C).  ``state``: (B,W-1,C)
+    previous inputs for decode continuation."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)
+    out = sum(ext[:, i:i + u.shape[1]] * w[i].astype(u.dtype) for i in range(W))
+    return out + b.astype(u.dtype), ext[:, -(W - 1):]
+
+
+def _gates(p, u, cfg: ModelCfg):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"])
+    i = jax.nn.sigmoid(uf @ p["w_i"])
+    log_a = -cfg.rglru.c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, b
+
+
+def rglru_forward(p, x, cfg: ModelCfg, h0=None):
+    """x: (B,S,D) -> (B,S,D).  Parallel scan over the diagonal recurrence."""
+    u = jnp.einsum("bsd,df->bsf", x, p["w_x"])
+    y = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_y"]))
+    u, _ = _causal_conv(u, p["conv_w"], p["conv_b"])
+    u = shard(u, "batch", "seq", "act_ff")
+    a, b = _gates(p, u, cfg)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def comb(x, yv):
+        a1, b1 = x
+        a2, b2 = yv
+        return a1 * a2, a2 * b1 + b2
+
+    with jax.named_scope("pallas_kernel.rglru_scan"):
+        _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    out = (h.astype(x.dtype) * y)
+    return jnp.einsum("bsf,fd->bsd", out, p["w_o"])
+
+
+# -- decode -------------------------------------------------------------------
+
+
+def init_rglru_cache(batch: int, cfg: ModelCfg):
+    dr = _d_rnn(cfg)
+    w = cfg.rglru.conv_width
+    from .common import dtype_of
+
+    return {"h": jnp.zeros((batch, dr), jnp.float32),
+            "conv": jnp.zeros((batch, w - 1, dr), dtype_of(cfg.dtype))}
+
+
+def specs_rglru_cache():
+    return {"h": ("batch", "ff"), "conv": ("batch", None, "ff")}
+
+
+def rglru_decode_step(p, x1, cache, cfg: ModelCfg):
+    """x1: (B,1,D)."""
+    u = jnp.einsum("bsd,df->bsf", x1, p["w_x"])
+    y = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x1, p["w_y"]))
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], state=cache["conv"])
+    a, b = _gates(p, u, cfg)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = (h[:, None].astype(x1.dtype) * y)
+    o = jnp.einsum("bsf,fd->bsd", out, p["w_o"])
+    return o, {"h": h, "conv": conv_state.astype(cache["conv"].dtype)}

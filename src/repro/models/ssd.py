@@ -1,0 +1,185 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within each chunk the recurrence is evaluated as a
+masked (decay-weighted) attention-like matmul; chunk boundary states are
+carried by a sequential scan over chunks.  This is the quadratic-in-chunk /
+linear-in-sequence form that maps onto the MXU (and onto the Pallas kernel in
+``repro.kernels.ssd_scan``).
+
+Layer structure (mamba2 block): in_proj -> [z | x | B | C | dt], short causal
+conv on (x,B,C), SSD core with scalar-per-head decay A, gated RMSNorm, out
+projection."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelCfg
+from ..parallel.api import shard
+from .common import _named_scope, ninit
+
+
+def dims(cfg: ModelCfg):
+    s = cfg.ssd
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.headdim
+    return d_inner, H, s.headdim, s.d_state
+
+
+def init_ssd(key, cfg: ModelCfg):
+    s = cfg.ssd
+    d = cfg.d_model
+    d_inner, H, P, N = dims(cfg)
+    conv_ch = d_inner + 2 * N  # x, B, C share the conv (G=1 group)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": ninit(ks[0], (d, 2 * d_inner + 2 * N + H)),  # z,x,B,C,dt
+        "conv_w": ninit(ks[1], (s.conv_width, conv_ch), scale=0.1),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),               # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((d_inner,), jnp.float32),
+        "w_out": ninit(ks[2], (d_inner, d), scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def specs_ssd(cfg: ModelCfg):
+    return {
+        "w_in": ("embed_tp", "ff"),
+        "conv_w": (None, "ff"), "conv_b": ("ff",),
+        "A_log": ("heads",), "D": ("heads",), "dt_bias": ("heads",),
+        "norm_w": ("ff",),
+        "w_out": ("ff", "embed_tp"),
+    }
+
+
+def _split(p, x, cfg: ModelCfg):
+    d_inner, H, P, N = dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    z = proj[..., :d_inner]
+    rest = proj[..., d_inner:2 * d_inner + 2 * N]
+    dt = proj[..., -H:]
+    return z, rest, dt
+
+
+def _conv(p, rest, cfg: ModelCfg, state=None):
+    from .rglru import _causal_conv
+
+    out, new_state = _causal_conv(rest, p["conv_w"], p["conv_b"], state=state)
+    return jax.nn.silu(out), new_state
+
+
+def _gated_norm(y, z, w, eps=1e-6):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(yf * yf, -1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * w).astype(y.dtype)
+
+
+@_named_scope("pallas_kernel.ssd_scan")
+def ssd_core_chunked(xh, dt, A, Bc, Cc, D, chunk: int, h0=None):
+    """SSD core.  xh: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) < 0;
+    Bc/Cc: (B,S,N); D: (H,).  Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bb, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    Q = chunk
+    xc = xh.reshape(Bb, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bb, nc, Q, H).astype(jnp.float32)
+    Bcc = Bc.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    Ccc = Cc.reshape(Bb, nc, Q, N).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]                   # (B,nc,Q,H), negative
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+    # intra-chunk: scores[t,s] = C_t.B_s * exp(cum_t - cum_s) for s <= t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bcqn,bcsn->bcqs", Ccc, Bcc)
+    xdt = xc * dtc[..., None]                            # dt-weighted input
+    y_intra = jnp.einsum("bcqs,bcqsh,bcshp->bcqhp", cb, decay, xdt)
+
+    # chunk states: S_c = sum_s exp(cum_last - cum_s) B_s (x_s dt_s)^T
+    last = cum[:, :, -1:, :]
+    w_s = jnp.exp(last - cum)                            # (B,nc,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchnp", Bcc, w_s, xdt)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(last[:, :, 0, :])              # (B,nc,H)
+
+    def scan_fn(h_prev, inp):
+        dcy, st = inp                                    # (B,H), (B,H,N,P)
+        h_new = h_prev * dcy[..., None, None] + st
+        return h_new, h_prev
+
+    init = h0 if h0 is not None else jnp.zeros((Bb, H, N, P), jnp.float32)
+    hT, h_before = jax.lax.scan(
+        scan_fn,
+        init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)),
+    )
+    h_before = jnp.moveaxis(h_before, 0, 1)              # (B,nc,H,N,P) state entering chunk
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Ccc, jnp.exp(cum), h_before)
+
+    y = (y_intra + y_inter).reshape(Bb, nc * Q, H, P)[:, :S]
+    y = y + xh.reshape(Bb, nc * Q, H, P)[:, :S] * D[None, None, :, None]
+    return y, hT
+
+
+def ssd_forward(p, x, cfg: ModelCfg):
+    d_inner, H, P, N = dims(cfg)
+    z, rest, dt = _split(p, x, cfg)
+    rest, _ = _conv(p, rest, cfg)
+    xh = rest[..., :d_inner].reshape(*x.shape[:2], H, P)
+    Bc = rest[..., d_inner:d_inner + N]
+    Cc = rest[..., d_inner + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = shard(xh, "batch", "seq", "heads", None)
+    y, _ = ssd_core_chunked(xh, dt, A, Bc, Cc, p["D"], cfg.ssd.chunk)
+    y = y.reshape(*x.shape[:2], d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_w"])
+    return jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+
+
+# -- decode --------------------------------------------------------------------
+
+
+def init_ssd_cache(batch: int, cfg: ModelCfg):
+    d_inner, H, P, N = dims(cfg)
+    w = cfg.ssd.conv_width
+    conv_ch = d_inner + 2 * N
+    from .common import dtype_of
+
+    return {"h": jnp.zeros((batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((batch, w - 1, conv_ch), dtype_of(cfg.dtype))}
+
+
+def specs_ssd_cache():
+    return {"h": ("batch", "heads", None, None), "conv": ("batch", None, "ff")}
+
+
+def ssd_decode_step(p, x1, cache, cfg: ModelCfg):
+    d_inner, H, P, N = dims(cfg)
+    z, rest, dt = _split(p, x1, cfg)
+    rest, conv_state = _conv(p, rest, cfg, state=cache["conv"])
+    xh = rest[..., :d_inner].reshape(x1.shape[0], H, P).astype(jnp.float32)
+    Bc = rest[:, 0, d_inner:d_inner + N].astype(jnp.float32)
+    Cc = rest[:, 0, d_inner + N:].astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dtv * A[None, :])                                    # (B,H)
+    h = cache["h"] * decay[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bc, dtv, xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cc, h) + xh * p["D"][None, :, None]
+    y = y.reshape(x1.shape[0], 1, d_inner).astype(x1.dtype)
+    y = _gated_norm(y, z, p["norm_w"])
+    o = jnp.einsum("bsf,fd->bsd", y, p["w_out"])
+    return o, {"h": h, "conv": conv_state.astype(cache["conv"].dtype)}

@@ -1,0 +1,467 @@
+"""Layer stacks and the unified language model.
+
+A model is ``embed -> [segments] -> final norm -> lm head``.  Each segment is
+a *pattern* of block kinds repeated ``repeats`` times; the repeats are
+``lax.scan``-ned over stacked parameters so trace/compile time is
+O(#distinct block kinds), not O(#layers) — required for the 512-device
+dry-run compiles of the 100-layer archs.
+
+Block kinds (configs.base.Segment.pattern):
+    attn        causal GQA self-attention (+RoPE)
+    local_attn  sliding-window GQA (window = cfg.attn.window)
+    enc_attn    bidirectional GQA (encoder stacks)
+    cross_attn  gated cross-attention to a memory (VLM image layers /
+                enc-dec decoder)
+    mla         multi-head latent attention (DeepSeek-V2)
+    rglru       RG-LRU recurrent block (Griffin)
+    ssd         Mamba-2 SSD mixer
+Each block is pre-norm residual; a per-block FFN (mlp / moe / none per the
+segment) follows with its own pre-norm residual.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelCfg, Segment
+from ..parallel.api import shard
+from . import attention, mla, mlp, rglru, ssd
+from .common import dtype_of, init_norm, ninit, rms_norm, softcap, specs_norm
+
+MIXER_KINDS = ("attn", "local_attn", "enc_attn", "cross_attn", "mla", "rglru", "ssd")
+
+
+# ---------------------------------------------------------------------------
+# single block (mixer + ffn), parameterised by kind
+# ---------------------------------------------------------------------------
+
+
+def _init_mixer(key, kind: str, cfg: ModelCfg):
+    if kind in ("attn", "local_attn", "enc_attn"):
+        return attention.init_attn(key, cfg)
+    if kind == "cross_attn":
+        p = attention.init_attn(key, cfg, cross=True)
+        p["gate_attn"] = jnp.zeros((), jnp.float32)   # tanh-gated (llama3.2-v)
+        p["gate_ffn"] = jnp.zeros((), jnp.float32)
+        return p
+    if kind == "mla":
+        return mla.init_mla(key, cfg)
+    if kind == "rglru":
+        return rglru.init_rglru(key, cfg)
+    if kind == "ssd":
+        return ssd.init_ssd(key, cfg)
+    raise ValueError(kind)
+
+
+def _specs_mixer(kind: str, cfg: ModelCfg):
+    if kind in ("attn", "local_attn", "enc_attn"):
+        return attention.specs_attn(cfg)
+    if kind == "cross_attn":
+        p = attention.specs_attn(cfg, cross=True)
+        p["gate_attn"] = ()
+        p["gate_ffn"] = ()
+        return p
+    if kind == "mla":
+        return mla.specs_mla(cfg)
+    if kind == "rglru":
+        return rglru.specs_rglru(cfg)
+    if kind == "ssd":
+        return ssd.specs_ssd(cfg)
+    raise ValueError(kind)
+
+
+def init_block(key, kind: str, ffn: str, cfg: ModelCfg):
+    ks = jax.random.split(key, 2)
+    p: dict[str, Any] = {"ln1": init_norm(cfg.d_model), "mixer": _init_mixer(ks[0], kind, cfg)}
+    if ffn == "mlp":
+        p["ln2"] = init_norm(cfg.d_model)
+        p["ffn"] = mlp.init_mlp(ks[1], cfg)
+    elif ffn == "moe":
+        p["ln2"] = init_norm(cfg.d_model)
+        p["ffn"] = mlp.init_moe(ks[1], cfg)
+    return p
+
+
+def specs_block(kind: str, ffn: str, cfg: ModelCfg):
+    p: dict[str, Any] = {"ln1": specs_norm(), "mixer": _specs_mixer(kind, cfg)}
+    if ffn == "mlp":
+        p["ln2"] = specs_norm()
+        p["ffn"] = mlp.specs_mlp()
+    elif ffn == "moe":
+        p["ln2"] = specs_norm()
+        p["ffn"] = mlp.specs_moe(cfg)
+    return p
+
+
+def block_forward(p, x, kind: str, ffn: str, cfg: ModelCfg, *,
+                  positions=None, memory=None, causal=True):
+    """One block forward.  Returns (x, aux_loss)."""
+    plus1 = cfg.norm == "rmsnorm_p1"
+    h = rms_norm(x, p["ln1"]["scale"], cfg.norm_eps, plus_one=plus1)
+    if kind == "attn":
+        m = attention.attn_forward(p["mixer"], h, cfg, positions=positions, causal=causal)
+    elif kind == "local_attn":
+        m = attention.attn_forward(p["mixer"], h, cfg, positions=positions,
+                                   window=cfg.attn.window, causal=causal)
+    elif kind == "enc_attn":
+        m = attention.attn_forward(p["mixer"], h, cfg, positions=positions, causal=False)
+    elif kind == "cross_attn":
+        m = attention.attn_forward(p["mixer"], h, cfg, kv=memory)
+        m = jnp.tanh(p["mixer"]["gate_attn"]).astype(m.dtype) * m
+    elif kind == "mla":
+        if x.shape[1] >= 4096:
+            m = mla.mla_forward_chunked(p["mixer"], h, cfg, positions=positions)
+        else:
+            m = mla.mla_forward(p["mixer"], h, cfg, positions=positions)
+    elif kind == "rglru":
+        m = rglru.rglru_forward(p["mixer"], h, cfg)
+    elif kind == "ssd":
+        m = ssd.ssd_forward(p["mixer"], h, cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    x = x + m
+    aux = jnp.zeros((), jnp.float32)
+    if ffn in ("mlp", "moe"):
+        h = rms_norm(x, p["ln2"]["scale"], cfg.norm_eps, plus_one=plus1)
+        if ffn == "mlp":
+            f = mlp.mlp_forward(p["ffn"], h, cfg)
+        else:
+            f, aux = mlp.moe_forward(p["ffn"], h, cfg)
+        if kind == "cross_attn":
+            f = jnp.tanh(p["mixer"]["gate_ffn"]).astype(f.dtype) * f
+        x = x + f
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decode-step for a single block
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(kind: str, batch: int, seq_len: int, cfg: ModelCfg,
+                     memory_tokens: int = 0):
+    if kind in ("attn", "enc_attn"):
+        return attention.init_attn_cache(batch, seq_len, cfg)
+    if kind == "local_attn":
+        return attention.init_attn_cache(batch, seq_len, cfg, window=cfg.attn.window)
+    if kind == "cross_attn":
+        # precomputed memory K/V (filled by lm_prepare_decode_cache)
+        from .common import dtype_of
+
+        a = cfg.attn
+        mt = memory_tokens or cfg.frontend_tokens
+        dt = dtype_of(cfg.dtype)
+        return {"k": jnp.zeros((batch, mt, a.n_kv_heads, a.d_head), dt),
+                "v": jnp.zeros((batch, mt, a.n_kv_heads, a.d_head), dt)}
+    if kind == "mla":
+        return mla.init_mla_cache(batch, seq_len, cfg)
+    if kind == "rglru":
+        return rglru.init_rglru_cache(batch, cfg)
+    if kind == "ssd":
+        return ssd.init_ssd_cache(batch, cfg)
+    raise ValueError(kind)
+
+
+def specs_block_cache(kind: str, cfg: ModelCfg):
+    if kind in ("attn", "enc_attn"):
+        return attention.specs_attn_cache()
+    if kind == "local_attn":
+        return attention.specs_attn_cache(window=cfg.attn.window)
+    if kind == "cross_attn":
+        return {"k": ("batch", None, "kv_heads_decode", None),
+                "v": ("batch", None, "kv_heads_decode", None)}
+    if kind == "mla":
+        return mla.specs_mla_cache()
+    if kind == "rglru":
+        return rglru.specs_rglru_cache()
+    if kind == "ssd":
+        return ssd.specs_ssd_cache()
+    raise ValueError(kind)
+
+
+def block_decode_step(p, x1, cache, index, kind: str, ffn: str, cfg: ModelCfg, *, memory=None):
+    plus1 = cfg.norm == "rmsnorm_p1"
+    h = rms_norm(x1, p["ln1"]["scale"], cfg.norm_eps, plus_one=plus1)
+    if kind in ("attn", "enc_attn"):
+        m, cache = attention.attn_decode_step(p["mixer"], h, cache, index, cfg)
+    elif kind == "local_attn":
+        m, cache = attention.attn_decode_step(p["mixer"], h, cache, index, cfg,
+                                              window=cfg.attn.window)
+    elif kind == "cross_attn":
+        m = attention.cross_attn_decode(p["mixer"], h, cache["k"], cache["v"], cfg)
+        m = jnp.tanh(p["mixer"]["gate_attn"]).astype(m.dtype) * m
+    elif kind == "mla":
+        m, cache = mla.mla_decode_step(p["mixer"], h, cache, index, cfg)
+    elif kind == "rglru":
+        m, cache = rglru.rglru_decode_step(p["mixer"], h, cache, cfg)
+    elif kind == "ssd":
+        m, cache = ssd.ssd_decode_step(p["mixer"], h, cache, cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    x1 = x1 + m
+    if ffn in ("mlp", "moe"):
+        h = rms_norm(x1, p["ln2"]["scale"], cfg.norm_eps, plus_one=plus1)
+        if ffn == "mlp":
+            f = mlp.mlp_forward(p["ffn"], h, cfg)
+        else:
+            f, _ = mlp.moe_forward(p["ffn"], h, cfg)
+        if kind == "cross_attn":
+            f = jnp.tanh(p["mixer"]["gate_ffn"]).astype(f.dtype) * f
+        x1 = x1 + f
+    return x1, cache
+
+
+# ---------------------------------------------------------------------------
+# segment = pattern x repeats, scanned over stacked params
+# ---------------------------------------------------------------------------
+
+
+def init_segment(key, seg: Segment, cfg: ModelCfg):
+    """Params for one segment: per pattern-position, a pytree whose leaves
+    have a leading ``repeats`` dim (stacked for lax.scan)."""
+    out = []
+    for pos, kind in enumerate(seg.pattern):
+        keys = jax.random.split(jax.random.fold_in(key, pos), seg.repeats)
+        per = [init_block(k, kind, seg.ffn_at(pos), cfg) for k in keys]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    return out
+
+
+def specs_segment(seg: Segment, cfg: ModelCfg):
+    out = []
+    for kind in seg.pattern:
+        sp = specs_block(kind, seg.ffn_at(len(out)), cfg)
+        out.append(jax.tree.map(lambda ax: ("layers",) + ax, sp,
+                                is_leaf=lambda x: isinstance(x, tuple)))
+    return out
+
+
+def segment_forward(params, x, seg: Segment, cfg: ModelCfg, *,
+                    positions=None, memory=None, causal=True):
+    """Scan the segment's repeats.  Returns (x, aux_sum)."""
+
+    def body(carry, layer_params):
+        h, aux = carry
+        for pos, kind in enumerate(seg.pattern):
+            h, a = block_forward(layer_params[pos], h, kind, seg.ffn_at(pos), cfg,
+                                 positions=positions, memory=memory, causal=causal)
+            aux = aux + a
+        # NOTE: no with_sharding_constraint here — an explicit constraint on
+        # the scan carry forces SPMD into "involuntary full rematerialization"
+        # on the backward transpose (replicate-then-reshard); propagation
+        # from the embed output keeps the carry batch-sharded on its own.
+        return (h, aux), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), tuple(params))
+    return x, aux
+
+
+def init_segment_cache(seg: Segment, batch: int, seq_len: int, cfg: ModelCfg,
+                       memory_tokens: int = 0):
+    out = []
+    for kind in seg.pattern:
+        c0 = init_block_cache(kind, batch, seq_len, cfg, memory_tokens)
+        if not c0:
+            out.append({})
+            continue
+        per = [c0] + [init_block_cache(kind, batch, seq_len, cfg, memory_tokens)
+                      for _ in range(seg.repeats - 1)]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per))
+    return out
+
+
+def specs_segment_cache(seg: Segment, cfg: ModelCfg):
+    out = []
+    for kind in seg.pattern:
+        sp = specs_block_cache(kind, cfg)
+        out.append(jax.tree.map(lambda ax: ("layers",) + ax, sp,
+                                is_leaf=lambda x: isinstance(x, tuple)))
+    return out
+
+
+def segment_decode_step(params, x1, caches, index, seg: Segment, cfg: ModelCfg, *, memory=None):
+    def body(x1, sc):
+        layer_params, layer_caches = sc
+        new_caches = []
+        for pos, kind in enumerate(seg.pattern):
+            x1, nc = block_decode_step(layer_params[pos], x1, layer_caches[pos], index,
+                                       kind, seg.ffn_at(pos), cfg, memory=memory)
+            new_caches.append(nc)
+        return x1, tuple(new_caches)
+
+    x1, new_caches = jax.lax.scan(body, x1, (tuple(params), tuple(caches)))
+    return x1, list(new_caches)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelCfg):
+    dt = dtype_of(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {
+        "embed": ninit(ks[0], (cfg.padded_vocab, cfg.d_model), dtype=dt),
+        "ln_f": init_norm(cfg.d_model),
+        "segments": [init_segment(jax.random.fold_in(ks[1], i), s, cfg)
+                     for i, s in enumerate(cfg.segments)],
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ninit(ks[2], (cfg.d_model, cfg.padded_vocab), dtype=dt)
+    if cfg.encoder_segments:
+        p["encoder"] = {
+            "segments": [init_segment(jax.random.fold_in(ks[3], i), s, cfg)
+                         for i, s in enumerate(cfg.encoder_segments)],
+            "ln_f": init_norm(cfg.d_model),
+        }
+    if cfg.frontend is not None and cfg.frontend_dim != cfg.d_model:
+        p["frontend_proj"] = ninit(ks[4], (cfg.frontend_dim, cfg.d_model), dtype=dt)
+    return p
+
+
+def specs_lm(cfg: ModelCfg):
+    p: dict[str, Any] = {
+        # the embed table's d dim uses its own logical axis: FSDP-sharding it
+        # together with a model-sharded vocab dim forces SPMD into
+        # "involuntary full rematerialization" on the token gather, so the
+        # rules can relax it independently (see parallel.rules embed_fsdp)
+        "embed": ("vocab", "embed_gather"),
+        "ln_f": specs_norm(),
+        "segments": [specs_segment(s, cfg) for s in cfg.segments],
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = ("embed_tp", "vocab")
+    if cfg.encoder_segments:
+        p["encoder"] = {
+            "segments": [specs_segment(s, cfg) for s in cfg.encoder_segments],
+            "ln_f": specs_norm(),
+        }
+    if cfg.frontend is not None and cfg.frontend_dim != cfg.d_model:
+        p["frontend_proj"] = ("embed_tp", None)
+    return p
+
+
+def _embed(p, tokens, cfg: ModelCfg):
+    x = p["embed"][tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def _memory_states(p, batch, cfg: ModelCfg):
+    """Encoder / modality-frontend memory for cross-attention.
+
+    ``batch["frontend_embeds"]``: (B, Tm, frontend_dim) precomputed patch or
+    audio-frame embeddings (the frontend itself is a stub per assignment)."""
+    mem = None
+    fe = batch.get("frontend_embeds")
+    if fe is not None:
+        mem = fe
+        if "frontend_proj" in p:
+            mem = jnp.einsum("btf,fd->btd", fe, p["frontend_proj"])
+        mem = shard(mem, "batch", None, "act_embed")
+    if cfg.encoder_segments:
+        assert mem is not None, "enc-dec model needs frontend_embeds/encoder inputs"
+        enc = p["encoder"]
+        x = mem
+        for seg_p, seg in zip(enc["segments"], cfg.encoder_segments):
+            x, _ = segment_forward(seg_p, x, seg, cfg, causal=False)
+        mem = rms_norm(x, enc["ln_f"]["scale"], cfg.norm_eps,
+                       plus_one=cfg.norm == "rmsnorm_p1")
+    return mem
+
+
+def lm_forward(p, batch, cfg: ModelCfg):
+    """batch: {"tokens": (B,S) int32, optional "positions",
+    optional "frontend_embeds": (B,Tm,Fd)}.  Returns (logits(B,S,V), aux)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    x = _embed(p, tokens, cfg)
+    memory = _memory_states(p, batch, cfg)
+
+    aux = jnp.zeros((), jnp.float32)
+    for seg_p, seg in zip(p["segments"], cfg.segments):
+        x, a = segment_forward(seg_p, x, seg, cfg, positions=positions, memory=memory)
+        aux = aux + a
+
+    x = rms_norm(x, p["ln_f"]["scale"], cfg.norm_eps, plus_one=cfg.norm == "rmsnorm_p1")
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = softcap(logits, cfg.logit_softcap)
+    return shard(logits, "batch", "seq", "vocab"), aux
+
+
+# -- decode -------------------------------------------------------------------
+
+
+def init_lm_cache(cfg: ModelCfg, batch: int, seq_len: int, memory_tokens: int = 0):
+    return {
+        "segments": [init_segment_cache(s, batch, seq_len, cfg, memory_tokens)
+                     for s in cfg.segments],
+    }
+
+
+def specs_lm_cache(cfg: ModelCfg):
+    return {
+        "segments": [specs_segment_cache(s, cfg) for s in cfg.segments],
+    }
+
+
+def lm_prefill_memory(p, batch, cfg: ModelCfg):
+    """Compute the cross-attention memory once before decoding."""
+    return _memory_states(p, batch, cfg)
+
+
+def lm_prepare_decode_cache(p, cache, batch, cfg: ModelCfg):
+    """Fill the per-layer cross-attention K/V caches from the (frontend /
+    encoder) memory — one pass at prefill instead of reprojecting the memory
+    every decode step."""
+    memory = _memory_states(p, batch, cfg)
+    if memory is None:
+        return cache
+    new_segs = []
+    for seg_p, seg_c, seg in zip(p["segments"], cache["segments"], cfg.segments):
+        new_pos = []
+        for pos, kind in enumerate(seg.pattern):
+            c = seg_c[pos]
+            if kind == "cross_attn":
+                # stacked weights (repeats, d, KvH, Dh) -> stacked K/V
+                wk = seg_p[pos]["mixer"]["wk"]
+                wv = seg_p[pos]["mixer"]["wv"]
+                k = jnp.einsum("btd,rdhe->rbthe", memory, wk)
+                v = jnp.einsum("btd,rdhe->rbthe", memory, wv)
+                c = {"k": k.astype(c["k"].dtype), "v": v.astype(c["v"].dtype)}
+            new_pos.append(c)
+        new_segs.append(new_pos)
+    return dict(cache, segments=new_segs)
+
+
+def lm_decode_step(p, cache, tokens1, index, cfg: ModelCfg):
+    """tokens1: (B,1) current token; index: scalar position.  Returns
+    (logits (B,1,V), new_cache)."""
+    x1 = _embed(p, tokens1, cfg)
+    new_segs = []
+    for seg_p, seg_c, seg in zip(p["segments"], cache["segments"], cfg.segments):
+        x1, nc = segment_decode_step(seg_p, x1, seg_c, index, seg, cfg)
+        new_segs.append(nc)
+    x1 = rms_norm(x1, p["ln_f"]["scale"], cfg.norm_eps, plus_one=cfg.norm == "rmsnorm_p1")
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x1, head)
+    logits = softcap(logits, cfg.logit_softcap)
+    new_cache = dict(cache)
+    new_cache["segments"] = new_segs
+    return logits, new_cache
+
+
+def param_count(p) -> int:
+    return sum(x.size for x in jax.tree.leaves(p))

@@ -1,0 +1,168 @@
+"""Train / prefill / decode step functions.
+
+Factories return pure functions suitable for ``jax.jit`` under a sharding-
+rules context (``parallel.api.use_rules``):
+
+  * ``make_train_step``  — fwd+bwd, microbatch gradient accumulation
+    (lax.scan), global-norm clip, AdamW; optional int8-compressed cross-pod
+    gradient all-reduce (``parallel.compression``).
+  * ``make_prefill_step`` — forward logits at full sequence length.
+  * ``make_serve_step``  — one decode step (new token) against the KV cache.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelCfg
+from ..models import transformer
+from ..optim.adamw import OptCfg, adamw_update, init_opt_state
+from ..parallel.api import shard
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def make_loss_fn(cfg: ModelCfg):
+    def loss_fn(params, batch):
+        logits, aux = transformer.lm_forward(params, batch, cfg)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones_like(labels, jnp.float32)
+        # vocab-sharded cross-entropy: never materialise (B,S,V) log-probs.
+        # logsumexp and the target-logit pick are reductions over the vocab
+        # dim, so the big tensor stays sharded (vocab -> model) and fused;
+        # take_along_axis on a sharded dim would all-gather the logits.
+        lf = logits.astype(jnp.float32)
+        m = jax.lax.stop_gradient(lf.max(axis=-1))
+        lse = m + jnp.log(jnp.exp(lf - m[..., None]).sum(axis=-1))
+        onehot = jax.nn.one_hot(labels, cfg.padded_vocab, dtype=lf.dtype)
+        tgt = (lf * onehot).sum(axis=-1)
+        denom = jnp.maximum(mask.sum(), 1.0)
+        xent = ((lse - tgt) * mask).sum() / denom
+        loss = xent + aux
+        return loss, {"xent": xent, "aux": aux,
+                      "accuracy": ((logits.argmax(-1) == labels) * mask).sum() / denom}
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def init_train_state(key, cfg: ModelCfg):
+    params = transformer.init_lm(key, cfg)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def constrain_like_params(grads, cfg: ModelCfg):
+    """Pin the gradient tree to the parameter sharding.  Without this, the
+    microbatch grad accumulator is replicated and every microbatch pays a
+    full all-reduce; with it GSPMD keeps grads distributed (reduce-scatter)
+    and defers the gather to the optimizer — ZeRO-2-style."""
+    from ..parallel.api import current_rules
+
+    rules = current_rules()
+    if rules is None:
+        return grads
+    specs = transformer.specs_lm(cfg)
+    flat_s, sdef = jax.tree.flatten(
+        specs, is_leaf=lambda t: isinstance(t, tuple) and
+        all(e is None or isinstance(e, str) for e in t))
+    flat_g, gdef = jax.tree.flatten(grads)
+    if len(flat_s) != len(flat_g):
+        return grads
+    out = [jax.lax.with_sharding_constraint(g, rules.resolve(s))
+           for g, s in zip(flat_g, flat_s)]
+    return jax.tree.unflatten(gdef, out)
+
+
+def make_train_step(
+    cfg: ModelCfg,
+    opt_cfg: OptCfg = OptCfg(),
+    num_microbatches: int = 1,
+    grad_compression: Optional[str] = None,   # None | "int8" (cross-pod)
+    mesh=None,
+    constrain_grads: bool = False,            # pin grads to param sharding
+):
+    loss_fn = make_loss_fn(cfg)
+
+    def _pin(g):
+        return constrain_like_params(g, cfg) if constrain_grads else g
+
+    def accumulate_grads(params, batch):
+        """(loss, metrics), grads — microbatched if requested."""
+        vg = jax.value_and_grad(loss_fn, has_aux=True)
+        if num_microbatches <= 1:
+            (loss, metrics), grads = vg(params, batch)
+            return loss, metrics, _pin(grads)
+
+        def split(x):
+            return x.reshape(num_microbatches, x.shape[0] // num_microbatches, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+
+        def body(acc, mb):
+            loss_acc, grad_acc = acc
+            (loss, metrics), grads = vg(params, mb)
+            grad_acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                    grad_acc, _pin(grads))
+            return (loss_acc + loss, _pin(grad_acc)), metrics
+
+        zeros = _pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (loss_sum, grads), metrics = jax.lax.scan(body, (jnp.zeros(()), zeros), mbs)
+        inv = 1.0 / num_microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return loss_sum * inv, metrics, grads
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_compression == "int8" and mesh is not None and "pod" in mesh.axis_names:
+            from ..parallel.compression import pod_grads_compressed
+
+            loss, metrics, grads = pod_grads_compressed(
+                accumulate_grads, params, batch, mesh)
+        else:
+            loss, metrics, grads = accumulate_grads(params, batch)
+        new_params, new_opt, opt_metrics = adamw_update(grads, state["opt"], params, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# inference steps
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelCfg):
+    def prefill_step(params, batch):
+        logits, _ = transformer.lm_forward(params, batch, cfg)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelCfg, temperature: float = 0.0):
+    def serve_step(params, cache, tokens1, index, rng=None):
+        """Greedy (or sampled) single-token decode step."""
+        logits, new_cache = transformer.lm_decode_step(params, cache, tokens1, index, cfg)
+        last = logits[:, -1, :].astype(jnp.float32)
+        if temperature > 0.0 and rng is not None:
+            next_tok = jax.random.categorical(rng, last / temperature, axis=-1)
+        else:
+            next_tok = last.argmax(-1)
+        return next_tok.astype(jnp.int32)[:, None], new_cache
+
+    return serve_step

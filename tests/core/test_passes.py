@@ -1,0 +1,139 @@
+"""Unit tests for the optimization passes (paper §6.2–6.4)."""
+
+import numpy as np
+
+from repro.core import ir, verifier
+from repro.core.builder import Builder
+from repro.core.lower import simulate
+from repro.core.passes import (
+    canonicalize,
+    constprop,
+    cse,
+    dce,
+    delay_elim,
+    precision_opt,
+    strength_reduce,
+)
+
+
+def _simple_func():
+    b = Builder(ir.Module("m"))
+    r = ir.MemrefType((16,), ir.i32, ir.PORT_R)
+    w = ir.MemrefType((16,), ir.i32, ir.PORT_W)
+    return b, r, w
+
+
+def test_constprop_folds_constant_chain():
+    b, r, w = _simple_func()
+    with b.func("f", [w], ["O"]) as f:
+        (O,) = f.args
+        c = b.add(b.const(3), b.const(4))
+        d = b.mult(c, b.const(2))
+        b.write(d, O, [b.const(0)], at=f.t)
+        b.ret()
+    n = constprop(b.module)
+    assert n >= 2
+    out = np.zeros((16,), np.int64)
+    simulate(b.module, "f", [out])
+    assert out[0] == 14
+
+
+def test_cse_merges_duplicate_expressions():
+    b, r, w = _simple_func()
+    with b.func("f", [r, w], ["A", "O"]) as f:
+        A, O = f.args
+        v = b.read(A, [b.const(0)], at=f.t)
+        x1 = b.add(v, 5)
+        x2 = b.add(v, 5)  # duplicate
+        b.write(x1, O, [b.const(0)], at=f.t + 1)
+        b.write(x2, O, [b.const(1)], at=f.t + 2)
+        b.ret()
+    assert cse(b.module) >= 1
+    adds = [op for op in b.module.get("f").body.walk() if op.opname == "add"]
+    live = dce(b.module)
+    adds_after = [op for op in b.module.get("f").body.walk() if op.opname == "add"]
+    assert len(adds_after) == 1
+
+
+def test_strength_reduce_pow2_mult_to_shift():
+    b, r, w = _simple_func()
+    with b.func("f", [r, w], ["A", "O"]) as f:
+        A, O = f.args
+        v = b.read(A, [b.const(0)], at=f.t)
+        x = b.mult(v, 8)
+        b.write(x, O, [b.const(0)], at=f.t + 1)
+        b.ret()
+    assert strength_reduce(b.module) == 1
+    ops = [op.opname for op in b.module.get("f").body.walk()]
+    assert "shl" in ops and "mult" not in ops
+    a = np.full((16,), 5, np.int64)
+    out = np.zeros((16,), np.int64)
+    simulate(b.module, "f", [a, out])
+    assert out[0] == 40
+
+
+def test_strength_reduce_iv_mult_to_counter():
+    b, r, w = _simple_func()
+    with b.func("f", [w], ["O"]) as f:
+        (O,) = f.args
+        with b.for_(0, 5, 1, at=f.t + 1) as l:
+            b.yield_(at=l.time + 1)
+            x = b.mult(l.iv, 3)  # IV * const -> scaled counter
+            i1 = b.delay(l.iv, 1, at=l.time)
+            xd = b.delay(x, 1, at=l.time)
+            b.write(xd, O, [i1], at=l.time + 1)
+        b.ret()
+    assert strength_reduce(b.module) == 1
+    mults = [op for op in b.module.get("f").body.walk() if op.opname == "mult"]
+    assert mults and mults[0].attrs.get("impl") == "counter"
+
+
+def test_precision_opt_narrows_loop_counter():
+    """Paper Table 4: constant loop bounds bound the IV width."""
+    b, r, w = _simple_func()
+    with b.func("f", [w], ["O"]) as f:
+        (O,) = f.args
+        with b.for_(0, 16, 1, at=f.t + 1) as l:
+            b.yield_(at=l.time + 1)
+            i1 = b.delay(l.iv, 1, at=l.time)
+            b.write(0, O, [i1], at=l.time + 1)
+        b.ret()
+        iv = l.iv
+    assert precision_opt(b.module) >= 1
+    assert isinstance(iv.type, ir.IntType) and iv.type.width <= 5  # [0,15] -> 4 bits
+
+
+def test_delay_elim_shares_shift_register_chains():
+    b, r, w = _simple_func()
+    with b.func("f", [r, w], ["A", "O"]) as f:
+        A, O = f.args
+        v = b.read(A, [b.const(0)], at=f.t)
+        d2 = b.delay(v, 2)
+        d5 = b.delay(v, 5)  # should re-tap d2's chain: depth 3 instead of 5
+        b.write(d2, O, [b.const(0)], at=f.t + 3)
+        b.write(d5, O, [b.const(1)], at=f.t + 6)
+        b.ret()
+    assert delay_elim(b.module) >= 1
+    delays = [op for op in b.module.get("f").body.walk() if op.opname == "delay"]
+    total_regs = sum(op.attrs["by"] for op in delays)
+    assert total_regs == 5  # 2 + 3 shared, not 2 + 5
+    verifier.verify(b.module)
+    a = np.full((16,), 7, np.int64)
+    out = np.zeros((16,), np.int64)
+    simulate(b.module, "f", [a, out])
+    assert out[0] == 7 and out[1] == 7
+
+
+def test_canonicalize_identity_folds():
+    b, r, w = _simple_func()
+    with b.func("f", [r, w], ["A", "O"]) as f:
+        A, O = f.args
+        v = b.read(A, [b.const(0)], at=f.t)
+        x = b.add(v, 0)       # x + 0 -> x
+        y = b.mult(x, 1)      # x * 1 -> x
+        b.write(y, O, [b.const(0)], at=f.t + 1)
+        b.ret()
+    assert canonicalize(b.module) >= 2
+    dce(b.module)
+    ops = [op.opname for op in b.module.get("f").body.walk()]
+    assert "add" not in ops and "mult" not in ops

@@ -1,0 +1,152 @@
+"""Schedule-verification tests reproducing the paper's Figures 1 and 2, plus
+port-conflict and structural diagnostics."""
+
+import pytest
+
+from repro.core import ir, verifier
+from repro.core.builder import Builder
+from repro.core.gallery import array_add, mac
+
+
+def _errors(m):
+    return [d for d in verifier.verify(m, raise_on_error=False) if d.severity == "error"]
+
+
+def test_fig1_stale_induction_variable():
+    m, _ = array_add.build_broken()
+    errs = _errors(m)
+    assert len(errs) == 1
+    assert "mismatched delay (0 vs 1) in address 0" in errs[0].message
+    assert errs[0].notes and "Prior definition" in errs[0].notes[0][1]
+
+
+def test_fig1_fixed_design_is_clean():
+    m, _ = array_add.build()
+    assert not _errors(m)
+
+
+def test_fig2_pipeline_imbalance():
+    m, _ = mac.build_broken()
+    errs = _errors(m)
+    assert len(errs) == 1
+    assert "mismatched delay (2 vs 3) in right operand" in errs[0].message
+
+
+def test_fig2_balanced_design_is_clean():
+    m, _ = mac.build()
+    assert not _errors(m)
+
+
+def test_port_conflict_same_cycle_different_address():
+    b = Builder(ir.Module("pc"))
+    r = ir.MemrefType((8,), ir.i32, ir.PORT_R)
+    w = ir.MemrefType((8,), ir.i32, ir.PORT_W)
+    with b.func("f", [r, w], ["A", "O"]) as f:
+        A, O = f.args
+        v0 = b.read(A, [b.const(0)], at=f.t)
+        v1 = b.read(A, [b.const(1)], at=f.t)  # same port, same cycle, diff addr
+        b.write(v0, O, [b.const(0)], at=f.t + 1)
+        b.write(v1, O, [b.const(1)], at=f.t + 2)
+        b.ret()
+    errs = _errors(b.module)
+    assert any("same cycle with different addresses" in e.message for e in errs)
+
+
+def test_same_address_parallel_reads_are_legal():
+    b = Builder(ir.Module("pc2"))
+    r = ir.MemrefType((8,), ir.i32, ir.PORT_R)
+    w = ir.MemrefType((8,), ir.i32, ir.PORT_W)
+    with b.func("f", [r, w], ["A", "O"]) as f:
+        A, O = f.args
+        v0 = b.read(A, [b.const(3)], at=f.t)
+        v1 = b.read(A, [b.const(3)], at=f.t)  # broadcast: same address
+        b.write(v0, O, [b.const(0)], at=f.t + 1)
+        v1d = b.delay(v1, 1)  # v1 valid at t+1; hold one cycle for the t+2 write
+        b.write(v1d, O, [b.const(1)], at=f.t + 2)
+        b.ret()
+    assert not _errors(b.module)
+
+
+def test_pipelined_congruence_conflict():
+    """Two accesses at offsets 0 and II inside an II-pipelined loop collide
+    (same congruence class) even though their offsets differ."""
+    b = Builder(ir.Module("pc3"))
+    r = ir.MemrefType((64,), ir.i32, ir.PORT_R)
+    w = ir.MemrefType((64,), ir.i32, ir.PORT_W)
+    with b.func("f", [r, w], ["A", "O"]) as f:
+        A, O = f.args
+        with b.for_(0, 32, 1, at=f.t + 1) as l:
+            b.yield_(at=l.time + 2)  # II = 2
+            v0 = b.read(A, [l.iv], at=l.time)
+            i2 = b.delay(l.iv, 2, at=l.time)
+            v1 = b.read(A, [i2], at=l.time + 2)  # offset 2 ≡ 0 (mod 2)
+            b.write(v0, O, [b.delay(l.iv, 1, at=l.time)], at=l.time + 1)
+            b.write(v1, O, [b.delay(i2, 1)], at=l.time + 3)
+        b.ret()
+    errs = _errors(b.module)
+    assert any("same cycle with different addresses" in e.message for e in errs)
+
+
+def test_distributed_dim_needs_constant_index():
+    b = Builder(ir.Module("bank"))
+    w = ir.MemrefType((4,), ir.i32, ir.PORT_W)
+    with b.func("f", [w], ["O"]) as f:
+        (O,) = f.args
+        bank = ir.MemrefType((4,), ir.i32, packed=[], kind=ir.KIND_REG)
+        Br, Bw = b.alloc(bank, names=["Br", "Bw"])
+        with b.for_(0, 4, 1, at=f.t + 1) as l:
+            b.yield_(at=l.time + 1)
+            b.write(0, Bw, [l.iv], at=l.time)  # dynamic bank index: error
+        b.ret()
+    errs = _errors(b.module)
+    assert any("compile-time constant" in e.message for e in errs)
+
+
+def test_time_variable_scoping():
+    """Ops inside a loop may only schedule on the iteration time variable
+    (paper §4.2)."""
+    b = Builder(ir.Module("scope"))
+    r = ir.MemrefType((8,), ir.i32, ir.PORT_R)
+    with b.func("f", [r], ["A"]) as f:
+        (A,) = f.args
+        with b.for_(0, 4, 1, at=f.t + 1) as l:
+            b.yield_(at=l.time + 1)
+            # schedule on the FUNCTION time var from inside the loop: error
+            b.read(A, [b.const(0)], at=f.t + 5)
+        b.ret()
+    errs = _errors(b.module)
+    assert any("not\nvisible" in e.message.replace("is not ", "not\n") or "not" in e.message.lower()
+               for e in errs)
+    assert errs
+
+
+def test_unscheduled_op_rejected_in_strict_mode():
+    b = Builder(ir.Module("strict"))
+    r = ir.MemrefType((8,), ir.i32, ir.PORT_R)
+    with b.func("f", [r], ["A"]) as f:
+        (A,) = f.args
+        op = ir.mem_read(A, [b.const(0)], ir.Time(f.op.time_var, 0))
+        op.start = None
+        b.insert(op)
+        b.ret()
+    errs = _errors(b.module)
+    assert any("unscheduled" in e.message for e in errs)
+
+
+def test_alloc_inside_loop_rejected():
+    b = Builder(ir.Module("allocscope"))
+    with b.func("f", [], []) as f:
+        with b.for_(0, 4, 1, at=f.t + 1) as l:
+            b.yield_(at=l.time + 1)
+            b.alloc(ir.MemrefType((4,), ir.i32), names=["Xr", "Xw"])
+        b.ret()
+    errs = _errors(b.module)
+    assert any("function scope" in e.message for e in errs)
+
+
+def test_diagnostics_render_with_locations():
+    m, _ = array_add.build_broken()
+    errs = _errors(m)
+    rendered = errs[0].render()
+    assert "array_add.py" in rendered
+    assert "note: Prior definition here." in rendered

@@ -1,0 +1,84 @@
+"""Per-assigned-architecture smoke tests: a reduced same-family config runs
+one forward + one train step + a short decode on CPU; output shapes and
+finiteness are asserted (assignment requirement f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeCfg
+from repro.configs.registry import get_smoke_config, list_archs
+from repro.data.pipeline import make_batch
+from repro.models import transformer
+from repro.optim.adamw import OptCfg
+from repro.train.steps import init_train_state, make_serve_step, make_train_step
+
+ARCHS = list_archs()
+SMOKE_SHAPE = ShapeCfg("smoke", seq_len=16, global_batch=2, kind="train")
+
+
+def _batch(cfg):
+    return {k: jnp.asarray(v) for k, v in make_batch(cfg, SMOKE_SHAPE).items()}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_smoke_config(arch)
+    batch = _batch(cfg)
+    params = transformer.init_lm(jax.random.key(0), cfg)
+    logits, aux = jax.jit(lambda p, b: transformer.lm_forward(p, b, cfg))(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = get_smoke_config(arch)
+    batch = _batch(cfg)
+    state = init_train_state(jax.random.key(0), cfg)
+    step = make_train_step(cfg, OptCfg(lr=1e-3, warmup_steps=2, decay_steps=10),
+                           num_microbatches=2)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    d0 = jax.tree.leaves(state["params"])[0]
+    d1 = jax.tree.leaves(new_state["params"])[0]
+    assert not np.allclose(np.asarray(d0, np.float32), np.asarray(d1, np.float32))
+    assert int(new_state["opt"]["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    batch = _batch(cfg)
+    params = transformer.init_lm(jax.random.key(0), cfg)
+    cache = transformer.init_lm_cache(cfg, batch=2, seq_len=32,
+                                      memory_tokens=cfg.frontend_tokens)
+    if cfg.frontend is not None:
+        cache = transformer.lm_prepare_decode_cache(params, cache, batch, cfg)
+    serve = make_serve_step(cfg)
+    tok = batch["tokens"][:, :1]
+    jit_serve = jax.jit(serve)
+    for i in range(3):
+        tok, cache = jit_serve(params, cache, tok, jnp.asarray(i, jnp.int32))
+    assert tok.shape == (2, 1)
+    assert int(tok.min()) >= 0 and int(tok.max()) < cfg.padded_vocab
+
+
+def test_train_loss_decreases_tinyllama():
+    """End-to-end sanity: 30 steps on the structured synthetic stream
+    decrease loss on the smallest dense config."""
+    cfg = get_smoke_config("tinyllama-1.1b")
+    shape = ShapeCfg("smoke", seq_len=32, global_batch=8, kind="train")
+    state = init_train_state(jax.random.key(0), cfg)
+    step = jax.jit(make_train_step(cfg, OptCfg(lr=1e-2, warmup_steps=5, decay_steps=100)))
+    losses = []
+    for i in range(30):
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(cfg, shape, step=i).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.5, losses
