@@ -8,8 +8,7 @@ from copy import deepcopy
 from repro.core.codegen.resources import report_module
 from repro.core.codegen.verilog import generate_verilog
 from repro.core.gallery import transpose
-from repro.core.passes import (canonicalize, constprop, cse, dce, delay_elim,
-                               precision_opt, run_pipeline, strength_reduce)
+from repro.core.passes import DEFAULT_PIPELINE_SPEC, PassManager
 
 PAPER = {
     "Vivado HLS": (41, 92),
@@ -35,14 +34,14 @@ def run() -> list[dict]:
                  "paper": PAPER["HIR (no opt)"]})
 
     m1, _ = transpose.build()
-    run_pipeline(m1)  # includes precision_opt
+    PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(m1)  # includes precision-opt
     rows.append({"flow": "HIR (auto opt)", **_resources(m1, entry),
                  "paper": PAPER["HIR (auto opt)"]})
 
     m2, _ = transpose.build()
     # everything except precision opt — isolates Table 4's effect
-    run_pipeline(m2, passes=[canonicalize, constprop, cse, strength_reduce,
-                             delay_elim, dce])
+    PassManager.from_spec(
+        "canonicalize,constprop,cse,strength-reduce,delay-elim,dce").run(m2)
     rows.append({"flow": "HIR (opt, no precision)", **_resources(m2, entry),
                  "paper": None})
     return rows

@@ -14,7 +14,7 @@ from repro.core.codegen.verilog import generate_verilog
 from repro.core.gallery import GALLERY, PAPER_BENCHMARKS
 from repro.core.hls.eraser import erase_schedule
 from repro.core.hls.scheduler import hls_schedule
-from repro.core.passes import run_pipeline
+from repro.core.passes import DEFAULT_PIPELINE_SPEC, PassManager
 
 PAPER = {  # (vivado LUT, FF, DSP, BRAM), (hir LUT, FF, DSP, BRAM)
     "transpose": ((7, 51, 0, 0), (8, 18, 0, 0)),
@@ -41,7 +41,7 @@ def run(bench_names=None) -> list[dict]:
         module, entry = gal.build()
 
         hir_m = deepcopy(module)
-        run_pipeline(hir_m)
+        PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(hir_m)
         hir_res = _total(generate_verilog(hir_m, entry))
 
         row = {"kernel": name, "hir": hir_res,
@@ -50,7 +50,7 @@ def run(bench_names=None) -> list[dict]:
         if name != "fifo":  # paper compares FIFO against hand Verilog, not HLS
             hls_m = erase_schedule(deepcopy(module))
             hls_schedule(hls_m)
-            run_pipeline(hls_m)
+            PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(hls_m)
             row["hls"] = _total(generate_verilog(hls_m, entry))
         rows.append(row)
     return rows

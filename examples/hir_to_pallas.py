@@ -23,7 +23,7 @@ from repro.core.codegen.resources import report_module
 from repro.core.codegen.verilog import generate_verilog
 from repro.core.gallery import stencil1d
 from repro.core.lower.to_pallas import lower_to_pallas
-from repro.core.passes import run_pipeline
+from repro.core.passes import DEFAULT_PIPELINE_SPEC, PassManager
 
 
 def main():
@@ -33,7 +33,8 @@ def main():
 
     # FPGA binding: Verilog + resources
     m2, _ = stencil1d.build(n=64)
-    run_pipeline(m2)
+    pm = PassManager.from_spec(DEFAULT_PIPELINE_SPEC)
+    pm.run(m2)
     vmods = generate_verilog(m2, entry)
     res = None
     for vm in vmods.values():

@@ -17,7 +17,7 @@ from repro.core.codegen.verilog import generate_verilog
 from repro.core.gallery import array_add
 from repro.core.lower import lower_to_jax, simulate
 from repro.core.lower.to_pallas import lower_to_pallas
-from repro.core.passes import run_pipeline
+from repro.core.passes import DEFAULT_PIPELINE_SPEC, PassManager
 from repro.core.printer import print_module
 
 
@@ -35,8 +35,12 @@ def main():
         print(d.render())
 
     # -- 3. optimize + Verilog ---------------------------------------------
-    stats = run_pipeline(module)
-    print("\n== optimization pipeline ==", {k: v for k, v in stats.items() if v})
+    # pipelines are declarative specs; the PassManager reports per-pass
+    # rewrite counts and wall time
+    pm = PassManager.from_spec(DEFAULT_PIPELINE_SPEC)
+    stats = pm.run(module)
+    print(f"\n== optimization pipeline ({pm.spec}) ==")
+    print(pm.render_stats())
     vmods = generate_verilog(module, entry)
     v = vmods[entry].text
     print(f"== Verilog: {len(v.splitlines())} lines, module {entry} ==")

@@ -13,7 +13,7 @@ one starting from the erased design."""
 from __future__ import annotations
 
 from .. import ir
-from ..ir import ForOp, Module, Operation, Region, replace_all_uses
+from ..ir import ForOp, Module, Operation, Region
 from ..parser import parse
 from ..printer import print_module
 
@@ -41,7 +41,9 @@ def erase_schedule(module: Module) -> Module:
             keep = []
             for op in region.ops:
                 if op.opname == "delay":
-                    replace_all_uses(f.body, op.result, op.operands[0])
+                    src = op.operands[0]
+                    op.result.replace_all_uses_with(src)
+                    op.drop_all_uses()
                     continue
                 op.start = None
                 for r in op.results:

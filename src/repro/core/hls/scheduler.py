@@ -58,6 +58,9 @@ class HLSResult:
     search_iters: int = 0
     sched_ops: int = 0
     delays_inserted: int = 0
+    # the PassManager that optimized the scheduled module (hls_compile only);
+    # read .stats_dict() for per-pass timing/rewrite statistics
+    pass_manager: Optional[object] = None
 
 
 @dataclass(frozen=True)
@@ -427,13 +430,25 @@ def hls_schedule(module: Module) -> HLSResult:
     return HLSScheduler(module).run()
 
 
-def hls_compile(module: Module, entry: Optional[str] = None):
-    """Full HLS pipeline: schedule + verify + Verilog codegen.  Returns
-    (HLSResult, {name: VerilogModule})."""
+def hls_compile(module: Module, entry: Optional[str] = None,
+                pipeline: Optional[str] = None):
+    """Full HLS pipeline: schedule + verify + optimize + Verilog codegen.
+    Returns (HLSResult, {name: VerilogModule}).
+
+    ``pipeline`` is a textual PassManager spec (default: the paper-benchmark
+    optimization pipeline); pass ``""`` to skip optimization.  The
+    PassManager used is exposed on the returned HLSResult as
+    ``result.pass_manager`` for per-pass statistics."""
     from ..codegen import generate_verilog
+    from ..passmgr import DEFAULT_PIPELINE_SPEC, PassManager
     from ..verifier import verify
 
     res = hls_schedule(module)
     verify(module, strict_schedule=False, raise_on_error=False)
+    spec = DEFAULT_PIPELINE_SPEC if pipeline is None else pipeline
+    if spec:
+        pm = PassManager.from_spec(spec)
+        pm.run(module)
+        res.pass_manager = pm
     vs = generate_verilog(module, entry=entry)
     return res, vs

@@ -15,8 +15,9 @@ Nothing here depends on JAX; lowering lives in ``core.lower``.
 from __future__ import annotations
 
 import itertools
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterable, Iterator, Optional, Sequence, Union
+from typing import Any, Callable, Iterable, Iterator, NamedTuple, Optional, Sequence, Union
 
 # --------------------------------------------------------------------------
 # Source locations (used by the verifier for paper-style diagnostics)
@@ -215,13 +216,27 @@ def is_primitive(t: Type) -> bool:
 _value_ids = itertools.count()
 
 
+class Use(NamedTuple):
+    """A single operand slot referencing a value (MLIR's OpOperand)."""
+
+    op: "Operation"
+    index: int
+
+
 class Value:
     """An SSA value.  ``birth`` is the schedule information: for primitive
     values it records when the value becomes valid (paper §4.3: each SSA
     variable of primitive type is defined only at a specific time instant).
-    Constants and memrefs have ``birth is None`` (always valid)."""
+    Constants and memrefs have ``birth is None`` (always valid).
 
-    __slots__ = ("id", "type", "name", "defining_op", "birth", "validity_end")
+    Every value maintains its *use-def chain*: ``_use_ops`` is a multiset of
+    the operations currently holding this value as an operand, kept up to
+    date by the ``OperandList`` mutation hooks.  Use queries (``uses``,
+    ``users``, ``replace_all_uses_with``) are therefore O(#uses) instead of
+    O(region) — the asymptotic difference that makes the worklist rewriter
+    in ``core.rewrite`` fast."""
+
+    __slots__ = ("id", "type", "name", "defining_op", "birth", "validity_end", "_use_ops")
 
     def __init__(self, type: Type, name: str = "", defining_op: Optional["Operation"] = None):
         self.id = next(_value_ids)
@@ -233,6 +248,43 @@ class Value:
         # validity window length in cycles; None => valid forever after birth
         # (e.g. a sequential loop's induction variable), 1 => single cycle.
         self.validity_end: Optional[int] = 1
+        # op -> number of operand slots of that op holding this value
+        self._use_ops: dict["Operation", int] = {}
+
+    # -- use-def chain ------------------------------------------------------
+    @property
+    def uses(self) -> list[Use]:
+        """All (op, operand_index) slots currently holding this value."""
+        out: list[Use] = []
+        for op in self._use_ops:
+            for i, o in enumerate(op.operands):
+                if o is self:
+                    out.append(Use(op, i))
+        return out
+
+    def users(self) -> list["Operation"]:
+        """Operations using this value (each listed once)."""
+        return list(self._use_ops)
+
+    @property
+    def num_uses(self) -> int:
+        return sum(self._use_ops.values())
+
+    def has_uses(self) -> bool:
+        return bool(self._use_ops)
+
+    def replace_all_uses_with(self, new: "Value") -> int:
+        """Replace *every* use of this value, anywhere in the IR, with
+        ``new``.  O(#uses).  Returns the number of replaced operand slots."""
+        if new is self:
+            return 0
+        n = 0
+        for op in list(self._use_ops):
+            for i, o in enumerate(op.operands):
+                if o is self:
+                    op.operands[i] = new
+                    n += 1
+        return n
 
     def __repr__(self) -> str:
         return f"%{self.name}: {self.type}"
@@ -286,11 +338,141 @@ class Region:
         self.ops.append(op)
         return op
 
+    def insert(self, index: int, op: "Operation") -> "Operation":
+        op.parent_region = self
+        self.ops.insert(index, op)
+        return op
+
+    def insert_before(self, anchor: "Operation", op: "Operation") -> "Operation":
+        return self.insert(self.ops.index(anchor), op)
+
+    def remove(self, op: "Operation") -> None:
+        self.ops.remove(op)
+        op.parent_region = None
+
     def walk(self) -> Iterator["Operation"]:
-        for op in self.ops:
-            yield op
-            for r in op.regions:
-                yield from r.walk()
+        """Preorder walk (op before its nested regions).  Eager: snapshots
+        the op tree, so callers may mutate region op-lists while iterating;
+        nested ``yield from`` generator chains were a measurable per-op cost
+        in the optimizer hot loop."""
+        out: list[Operation] = []
+        _collect_ops(self, out)
+        return iter(out)
+
+
+def _collect_ops(region: "Region", out: list) -> None:
+    for op in region.ops:
+        out.append(op)
+        for r in op.regions:
+            _collect_ops(r, out)
+
+
+class OperandList(list):
+    """The operand list of one operation.  Every mutation — indexed or sliced
+    assignment, append/insert/remove/pop/clear/extend — keeps the operands'
+    use-def chains (``Value._use_ops``) consistent, so legacy code that
+    mutates ``op.operands`` in place remains correct under the maintained
+    invariant."""
+
+    __slots__ = ("owner", "_live")
+
+    def __init__(self, owner: "Operation", values: Sequence[Value] = ()):
+        super().__init__(values)
+        self.owner = owner
+        self._live = True
+        for v in values:
+            self._register(v)
+
+    # -- chain bookkeeping --------------------------------------------------
+    def _register(self, v: Value) -> None:
+        if self._live:
+            u = v._use_ops
+            u[self.owner] = u.get(self.owner, 0) + 1
+
+    def _unregister(self, v: Value) -> None:
+        if self._live:
+            u = v._use_ops
+            k = u.get(self.owner, 0) - 1
+            if k <= 0:
+                u.pop(self.owner, None)
+            else:
+                u[self.owner] = k
+
+    def _drop_all(self) -> None:
+        """Detach this list from the chains (the op is being erased).  The
+        list contents are kept so accessors on dead ops still read, but no
+        further mutation touches the chains.  Idempotent."""
+        if self._live:
+            for v in self:
+                self._unregister(v)
+            self._live = False
+
+    # -- intercepted mutations ---------------------------------------------
+    def __setitem__(self, i, v):
+        if isinstance(i, slice):
+            for old in self[i]:
+                self._unregister(old)
+            v = list(v)
+            for new in v:
+                self._register(new)
+        else:
+            self._unregister(self[i])
+            self._register(v)
+        super().__setitem__(i, v)
+
+    def __delitem__(self, i):
+        if isinstance(i, slice):
+            for old in self[i]:
+                self._unregister(old)
+        else:
+            self._unregister(self[i])
+        super().__delitem__(i)
+
+    def append(self, v):
+        self._register(v)
+        super().append(v)
+
+    def extend(self, vs):
+        vs = list(vs)
+        for v in vs:
+            self._register(v)
+        super().extend(vs)
+
+    def __iadd__(self, vs):
+        self.extend(vs)
+        return self
+
+    def insert(self, i, v):
+        self._register(v)
+        super().insert(i, v)
+
+    def remove(self, v):
+        super().remove(v)
+        self._unregister(v)
+
+    def pop(self, i=-1):
+        v = super().pop(i)
+        self._unregister(v)
+        return v
+
+    def clear(self):
+        for v in self:
+            self._unregister(v)
+        super().clear()
+
+    def __reduce_ex__(self, protocol):
+        # deepcopy/pickle: rebuild through Operation.__init__'s wrapping is
+        # impossible here, so reconstruct the raw state (owner backref is
+        # restored by copying the owner op's attribute graph).
+        return (_rebuild_operand_list, (self.owner, list(self), self._live))
+
+
+def _rebuild_operand_list(owner, values, live):
+    ol = OperandList.__new__(OperandList)
+    list.__init__(ol, values)
+    ol.owner = owner
+    ol._live = live
+    return ol
 
 
 class Operation:
@@ -302,7 +484,8 @@ class Operation:
     used ahead of Verilog codegen.
     """
 
-    __slots__ = ("opname", "operands", "results", "attrs", "regions", "start", "loc", "parent_region")
+    __slots__ = ("opname", "operands", "results", "attrs", "regions", "start", "loc",
+                 "parent_region", "_dead")
 
     def __init__(
         self,
@@ -316,7 +499,8 @@ class Operation:
         result_names: Sequence[str] = (),
     ):
         self.opname = opname
-        self.operands: list[Value] = list(operands)
+        self._dead = False
+        self.operands: OperandList = OperandList(self, list(operands))
         self.results: list[Value] = []
         for i, rt in enumerate(result_types):
             nm = result_names[i] if i < len(result_names) else ""
@@ -337,6 +521,37 @@ class Operation:
 
     def region(self, i: int = 0) -> Region:
         return self.regions[i]
+
+    # -- mutation API (keeps use-def chains consistent) ---------------------
+    def set_operand(self, i: int, v: Value) -> None:
+        self.operands[i] = v
+
+    @property
+    def is_erased(self) -> bool:
+        return self._dead
+
+    def drop_all_uses(self) -> None:
+        """Unregister every operand use held by this op and (recursively) by
+        the ops of its nested regions, and mark them erased.  Called when the
+        op is discarded; idempotent."""
+        self._dead = True
+        self.operands._drop_all()
+        for r in self.regions:
+            for op in r.ops:
+                op.drop_all_uses()
+
+    def erase(self) -> None:
+        """Erase this op: drop all operand uses (recursively through nested
+        regions) and unlink it from its parent region's op list.  The op's
+        results must be dead or already replaced — erasing an op whose
+        results still have uses leaves dangling references."""
+        self.drop_all_uses()
+        if self.parent_region is not None:
+            try:
+                self.parent_region.ops.remove(self)
+            except ValueError:
+                pass  # already unlinked (e.g. batch compaction)
+            self.parent_region = None
 
     def __repr__(self) -> str:
         rs = ", ".join(f"%{r.name}" for r in self.results)
@@ -728,9 +943,10 @@ def const_value(v: Value) -> Optional[Union[int, float]]:
     return None
 
 
-def replace_all_uses(region: Region, old: Value, new: Value) -> int:
-    """Replace every use of ``old`` with ``new`` within ``region`` (recursing
-    into nested regions).  Returns the number of replaced uses."""
+def _replace_all_uses_in_region(region: Region, old: Value, new: Value) -> int:
+    """O(region) region-scoped replacement — retained only as the baseline
+    the legacy sweep benchmark measures.  New code wants
+    ``old.replace_all_uses_with(new)`` (global, O(#uses))."""
     n = 0
     for op in region.walk():
         for i, o in enumerate(op.operands):
@@ -740,5 +956,26 @@ def replace_all_uses(region: Region, old: Value, new: Value) -> int:
     return n
 
 
+def replace_all_uses(region: Region, old: Value, new: Value) -> int:
+    """DEPRECATED: replaces only the uses inside ``region``, silently missing
+    uses held by sibling scopes (e.g. a second top-level loop reading the
+    same value).  Use ``old.replace_all_uses_with(new)``, which is global and
+    O(#uses)."""
+    warnings.warn(
+        "replace_all_uses(region, old, new) is deprecated and unsafe: it misses "
+        "uses outside `region`; use old.replace_all_uses_with(new) instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _replace_all_uses_in_region(region, old, new)
+
+
 def op_uses(region: Region, v: Value) -> list[Operation]:
+    """DEPRECATED: O(region) scan scoped to ``region``.  Use ``v.users()``
+    (global, O(#uses))."""
+    warnings.warn(
+        "op_uses(region, v) is deprecated; use v.users() instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return [op for op in region.walk() if any(o is v for o in op.operands)]

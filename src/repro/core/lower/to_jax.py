@@ -261,7 +261,16 @@ class _Lowerer:
         return dict(zip(keys, carry))
 
 
-def lower_to_jax(module: Module, func_name: str) -> Callable:
+def lower_to_jax(module: Module, func_name: str,
+                 pipeline: Optional[str] = None) -> Callable:
     """Lower ``@func_name`` to a pure JAX function: arrays in (one per memref
-    arg, scalars for primitives), dict of final writable-memref arrays out."""
+    arg, scalars for primitives), dict of final writable-memref arrays out.
+
+    ``pipeline`` optionally names a ``PassManager`` spec (e.g.
+    ``"canonicalize,cse,dce"``) run on ``module`` (in place) before lowering —
+    the declarative way to pre-optimize the IR the trace is built from."""
+    if pipeline:
+        from ..passmgr import PassManager
+
+        PassManager.from_spec(pipeline).run(module)
     return _Lowerer(module).lower(module.get(func_name))

@@ -27,7 +27,7 @@ the schedule verifier); the pipeline realisation is Pallas's.
 
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -150,9 +150,17 @@ class _KernelInterp:
 
 
 def lower_to_pallas(module: Module, func_name: str, *,
-                    interpret: bool = True) -> Callable:
+                    interpret: bool = True,
+                    pipeline: Optional[str] = None) -> Callable:
     """Lower ``@func_name`` to a callable mapping input arrays (one per
-    read-port memref arg) to a dict of output arrays (write-port args)."""
+    read-port memref arg) to a dict of output arrays (write-port args).
+
+    ``pipeline`` optionally names a ``PassManager`` spec run on ``module``
+    (in place) before lowering, mirroring ``lower_to_jax``."""
+    if pipeline:
+        from ..passmgr import PassManager
+
+        PassManager.from_spec(pipeline).run(module)
     func = module.get(func_name)
     in_args = [a for a in func.args if isinstance(a.type, MemrefType)
                and a.type.port == ir.PORT_R]

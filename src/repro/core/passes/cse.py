@@ -4,12 +4,17 @@ Combinational ops are time-free wires, so two arith ops with identical
 (opname, operands, attrs) compute the same signal regardless of their
 schedule annotation and can share hardware.  Delays additionally require the
 same source *and* the same depth (partial sharing of shift-register chains is
-done by ``delay_elim``)."""
+done by ``delay_elim``).
+
+CSE is inherently a scoped-hash-table pass, not a local pattern: it runs as a
+single region walk, but replacement now goes through the maintained use-def
+chains (O(#uses) per merged op instead of O(region))."""
 
 from __future__ import annotations
 
 from .. import ir
-from ..ir import Module, Operation, Region, replace_all_uses
+from ..ir import Module, Operation, Region
+from ..passmgr import Pass, register_pass
 
 
 def _key(op: Operation):
@@ -27,29 +32,37 @@ def _key(op: Operation):
     return None
 
 
+@register_pass
+class CSE(Pass):
+    name = "cse"
+
+    def run(self, module: Module) -> int:
+        n = 0
+        for f in self.each_func(module):
+
+            def run_region(region: Region, seen: dict) -> int:
+                m = 0
+                keep = []
+                for op in region.ops:
+                    k = _key(op)
+                    if k is not None and op.results:
+                        if k in seen:
+                            op.result.replace_all_uses_with(seen[k])
+                            op.drop_all_uses()
+                            m += 1
+                            continue
+                        seen[k] = op.result
+                    for r in op.regions:
+                        # nested scopes may reuse outer expressions but not
+                        # vice versa: pass a child view of the map
+                        m += run_region(r, dict(seen))
+                    keep.append(op)
+                region.ops[:] = keep
+                return m
+
+            n += run_region(f.body, {})
+        return n
+
+
 def cse(module: Module) -> int:
-    n = 0
-    for f in module.funcs.values():
-        if f.attrs.get("external"):
-            continue
-
-        def run(region: Region, seen: dict) -> None:
-            nonlocal n
-            keep = []
-            for op in region.ops:
-                k = _key(op)
-                if k is not None and op.results:
-                    if k in seen:
-                        replace_all_uses(f.body, op.result, seen[k])
-                        n += 1
-                        continue
-                    seen[k] = op.result
-                for r in op.regions:
-                    # nested scopes may reuse outer expressions but not
-                    # vice versa: pass a child view of the map
-                    run(r, dict(seen))
-                keep.append(op)
-            region.ops[:] = keep
-
-        run(f.body, {})
-    return n
+    return CSE().run(module)

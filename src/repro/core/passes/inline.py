@@ -51,7 +51,8 @@ def _inline_region(module: Module, func: FuncOp, region: Region) -> int:
                 new_ops.extend(clones)
                 # bind call results to the cloned returned values
                 for res, rv in zip(op.results, ret_vals):
-                    ir.replace_all_uses(func.body, res, vmap.get(rv, rv))
+                    res.replace_all_uses_with(vmap.get(rv, rv))
+                op.drop_all_uses()  # the call op is replaced by the clones
                 n += 1
                 continue
         new_ops.append(op)
@@ -72,3 +73,16 @@ def inline_calls(module: Module, entry: str | None = None) -> int:
         if n == 0:
             break
     return total
+
+
+from ..passmgr import Pass, register_pass  # noqa: E402
+
+
+@register_pass
+class Inline(Pass):
+    """Module-hierarchy flattening (pre-codegen)."""
+
+    name = "inline"
+
+    def run(self, module: Module) -> int:
+        return inline_calls(module)

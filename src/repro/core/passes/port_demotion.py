@@ -98,3 +98,17 @@ def port_demotion(module: Module) -> int:
                 op.attrs["single_port"] = True
                 n += 1
     return n
+
+
+from ..passmgr import Pass, register_pass  # noqa: E402
+
+
+@register_pass
+class PortDemotion(Pass):
+    """Schedule-disjointness proof over whole functions (not a local
+    pattern)."""
+
+    name = "port-demotion"
+
+    def run(self, module: Module) -> int:
+        return port_demotion(module)

@@ -133,3 +133,17 @@ def precision_opt(module: Module) -> int:
                 v.type = ir.IntType(w, signed)
                 n += 1
     return n
+
+
+from ..passmgr import Pass, register_pass  # noqa: E402
+
+
+@register_pass
+class PrecisionOpt(Pass):
+    """Interval analysis + bitwidth narrowing (whole-function analysis; not
+    a local pattern)."""
+
+    name = "precision-opt"
+
+    def run(self, module: Module) -> int:
+        return precision_opt(module)

@@ -133,7 +133,8 @@ def _expand_unroll(func: FuncOp, region: Region) -> int:
                                   name=op.end_time.name)
             endt.parent_region = region
             new_ops.append(endt)
-            ir.replace_all_uses(func.body, op.end_time, endt.result)
+            op.end_time.replace_all_uses_with(endt.result)
+            op.drop_all_uses()  # the loop (and its body) is replaced by clones
             n += 1
         else:
             new_ops.append(op)
@@ -154,3 +155,16 @@ def unroll_loops(module: Module) -> int:
             if k == 0:
                 break
     return n
+
+
+from ..passmgr import Pass, register_pass  # noqa: E402
+
+
+@register_pass
+class Unroll(Pass):
+    """Full unroll_for expansion (pre-codegen)."""
+
+    name = "unroll"
+
+    def run(self, module: Module) -> int:
+        return unroll_loops(module)

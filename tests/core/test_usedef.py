@@ -1,0 +1,165 @@
+"""Use-def chain maintenance invariants (the core of the compiler-infra PR):
+operand mutation, op erasure and RAUW must keep ``Value`` use lists exact."""
+
+import warnings
+
+import pytest
+
+from repro.core import ir
+from repro.core.builder import Builder
+
+
+def _chains_consistent(module: ir.Module) -> list[str]:
+    """Recomputes uses from scratch and diffs against the maintained chains."""
+    truth: dict[int, dict] = {}
+    for op in module.walk():
+        for v in op.operands:
+            d = truth.setdefault(v.id, {})
+            d[id(op)] = d.get(id(op), 0) + 1
+    errors = []
+    seen_vals = set()
+    for op in module.walk():
+        for v in list(op.operands) + list(op.results):
+            if v.id in seen_vals:
+                continue
+            seen_vals.add(v.id)
+            maintained = {id(o): c for o, c in v._use_ops.items()}
+            if maintained != truth.get(v.id, {}):
+                errors.append(f"%{v.name}: maintained={maintained} truth={truth.get(v.id)}")
+    return errors
+
+
+def test_construction_registers_uses():
+    c1 = ir.constant(1)
+    c2 = ir.constant(2)
+    op = ir.arith("add", [c1.result, c2.result])
+    assert c1.result.users() == [op]
+    assert c1.result.num_uses == 1
+    assert [u.op for u in c1.result.uses] == [op]
+    assert [u.index for u in c1.result.uses] == [0]
+    assert c2.result.uses[0].index == 1
+
+
+def test_set_operand_moves_use():
+    c1, c2, c3 = ir.constant(1), ir.constant(2), ir.constant(3)
+    op = ir.arith("add", [c1.result, c2.result])
+    op.set_operand(0, c3.result)
+    assert not c1.result.has_uses()
+    assert c3.result.users() == [op]
+    assert op.operands[0] is c3.result
+
+
+def test_duplicate_operand_multiplicity():
+    c = ir.constant(7)
+    op = ir.arith("add", [c.result, c.result])
+    assert c.result.num_uses == 2
+    assert len(c.result.uses) == 2
+    op.set_operand(1, ir.constant(8).result)
+    assert c.result.num_uses == 1
+
+
+def test_slice_assignment_and_list_ops_update_chains():
+    c1, c2, c3 = ir.constant(1), ir.constant(2), ir.constant(3)
+    op = ir.arith("add", [c1.result, c2.result])
+    op.operands[:] = [c3.result, c3.result]
+    assert not c1.result.has_uses() and not c2.result.has_uses()
+    assert c3.result.num_uses == 2
+    op.operands.append(c1.result)
+    assert c1.result.num_uses == 1
+    op.operands.pop()
+    assert not c1.result.has_uses()
+
+
+def test_erase_drops_uses_recursively():
+    b = Builder(ir.Module("m"))
+    w = ir.MemrefType((8,), ir.i32, ir.PORT_W)
+    with b.func("f", [w], ["O"]) as f:
+        (O,) = f.args
+        n = b.const(5)
+        with b.for_(0, n, 1, at=f.t + 1) as l:
+            b.yield_(at=l.time + 1)
+            i1 = b.delay(l.iv, 1, at=l.time)
+            b.write(0, O, [i1], at=l.time + 1)
+        b.ret()
+    func = b.module.get("f")
+    loop = next(op for op in func.body.walk() if isinstance(op, ir.ForOp))
+    n_val = loop.ub
+    assert loop in n_val.users()
+    loop.erase()
+    # the loop's own use of %n and every use held by its body are gone
+    assert not n_val.has_uses()
+    assert loop.parent_region is None and loop.is_erased
+    assert loop not in func.body.ops
+
+
+def test_rauw_is_global_across_sibling_scopes():
+    """The satellite fix: the deprecated region-scoped helper silently loses
+    uses in sibling scopes; Value.replace_all_uses_with is global."""
+    b = Builder(ir.Module("m"))
+    r = ir.MemrefType((8,), ir.i32, ir.PORT_R)
+    w = ir.MemrefType((8,), ir.i32, ir.PORT_W)
+    with b.func("f", [r, w], ["A", "O"]) as f:
+        A, O = f.args
+        v = b.read(A, [b.const(0)], at=f.t)
+        with b.for_(0, 4, 1, at=f.t + 1) as l1:
+            b.yield_(at=l1.time + 1)
+            b.write(v, O, [l1.iv], at=l1.time + 1)
+        with b.for_(0, 4, 1, at=l1.end + 1) as l2:
+            b.yield_(at=l2.time + 1)
+            b.write(v, O, [l2.iv], at=l2.time + 1)
+        b.ret()
+    func = b.module.get("f")
+    loops = [op for op in func.body.ops if isinstance(op, ir.ForOp)]
+    assert len(loops) == 2
+    v = next(op for op in func.body.ops if op.opname == "mem_read").result
+    replacement = ir.Value(v.type, "fresh")
+
+    # old helper, scoped to the first loop's region: loses the sibling use
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        n_old = ir.replace_all_uses(loops[0].region(0), v, replacement)
+        assert any(issubclass(c.category, DeprecationWarning) for c in caught)
+    assert n_old == 1
+    assert v.has_uses(), "old helper left the sibling-scope use dangling"
+    leftover = [u.op.opname for u in v.uses]
+    assert "mem_write" in leftover  # the second loop still reads the old value
+
+    # undo, then the new global API catches every use at once
+    replacement.replace_all_uses_with(v)
+    n_new = v.replace_all_uses_with(replacement)
+    assert n_new == 2
+    assert not v.has_uses()
+    assert replacement.num_uses == 2
+
+
+def test_chains_consistent_after_full_pipeline():
+    from repro.core.gallery import GALLERY
+    from repro.core.passes import PassManager, DEFAULT_PIPELINE_SPEC
+
+    for name in ("stencil1d", "conv2d", "gemm"):
+        m, _ = GALLERY[name].build()
+        PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(m)
+        assert _chains_consistent(m) == []
+
+
+def test_chains_consistent_after_codegen_pipeline():
+    from repro.core.gallery import GALLERY
+    from repro.core.passes import PassManager
+
+    m, _ = GALLERY["conv2d"].build()
+    PassManager.from_spec("inline,unroll", fixpoint=False).run(m)
+    assert _chains_consistent(m) == []
+
+
+def test_deepcopy_preserves_chains():
+    from copy import deepcopy
+
+    from repro.core.gallery import GALLERY
+
+    m, _ = GALLERY["stencil1d"].build()
+    m2 = deepcopy(m)
+    assert _chains_consistent(m2) == []
+    # and the copy's chains are disjoint from the original's
+    op = next(iter(m2.walk()))
+    for v in op.operands:
+        assert all(u in set(m2.walk()) for u in v.users())
