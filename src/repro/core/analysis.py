@@ -1,15 +1,23 @@
-"""Schedule analyses shared by the verifier, the codegen and the HLS
-baseline: initiation intervals, iteration latencies, loop/function latency
-bounds, and access tables per memref port.
+"""Schedule analyses shared by the verifier, the codegen, the HLS baseline
+and the schedule-transform passes: initiation intervals, iteration latencies,
+loop/function latency bounds, access tables per memref port, memory-touch /
+banking analysis, and the dependence graph (SSA + memory edges with
+distances).
+
+Each analysis is registered with the ``core.passmgr`` AnalysisManager
+(``loop-info``, ``port-accesses``, ``mem-touch``, ``dependence``) so
+consumers share one cached computation per function instead of re-deriving
+private copies; passes declare which analyses they preserve.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, NamedTuple, Optional
 
 from . import ir
-from .ir import ForOp, FuncOp, Operation, Region, Time, Value
+from .ir import ForOp, FuncOp, MemrefType, Operation, Region, Time, Value
+from .passmgr import AnalysisManager, FunctionAnalysis, register_analysis
 
 
 @dataclass
@@ -51,6 +59,26 @@ def op_completion_offset(op: Operation, root: Value, loops: dict[ForOp, "LoopInf
     return base
 
 
+def span_completion_offset(op: Operation, root: Value,
+                           loops: dict[ForOp, "LoopInfo"]) -> Optional[int]:
+    """Completion cycle of ``op`` relative to ``root`` as counted into a
+    loop's body span: directly scheduled on ``root``, or chained off an inner
+    loop's end time whose latency is statically derivable.  None when the
+    completion cannot be bounded."""
+    c = op_completion_offset(op, root, loops)
+    if c is not None:
+        return c
+    if op.start is not None and isinstance(op.start.tv.defining_op, ForOp):
+        fop: ForOp = op.start.tv.defining_op  # type: ignore[assignment]
+        li = loops.get(fop)
+        if li is not None and li.total_latency is not None \
+                and fop.start is not None and fop.start.tv is root:
+            c2 = op_completion_offset(op, op.start.tv, loops)
+            if c2 is not None:
+                return fop.start.offset + li.total_latency + c2
+    return None
+
+
 def analyze_loops(func: FuncOp) -> dict[ForOp, LoopInfo]:
     """Bottom-up loop analysis: II, trip count, body span, total latency."""
     loops: dict[ForOp, LoopInfo] = {}
@@ -67,17 +95,9 @@ def analyze_loops(func: FuncOp) -> dict[ForOp, LoopInfo]:
         trip = op.trip_count()
         span = 0
         for inner in op.region(0).ops:
-            c = op_completion_offset(inner, root, loops)
+            c = span_completion_offset(inner, root, loops)
             if c is not None:
                 span = max(span, c)
-            # ops chained off an inner loop's end time extend the span too
-            elif inner.start is not None and inner.start.tv.defining_op in loops:
-                fop: ForOp = inner.start.tv.defining_op  # type: ignore[assignment]
-                li = loops[fop]
-                if li.total_latency is not None and fop.start is not None and fop.start.tv is root:
-                    c2 = op_completion_offset(inner, inner.start.tv, loops)
-                    if c2 is not None:
-                        span = max(span, fop.start.offset + li.total_latency + c2)
         y = op.yield_op()
         ii: Optional[int] = None
         seq_iter_len: Optional[int] = None
@@ -191,3 +211,275 @@ def collect_port_accesses(func: FuncOp, loops: dict[ForOp, LoopInfo]) -> dict[Va
 
     visit(func.body, None)
     return out
+
+
+# --------------------------------------------------------------------------
+# Memory-touch / banking analysis (lifted out of the HLS scheduler so the
+# scheduler, the unroll-legality check and the schedule-transform passes all
+# share one definition of "which storage does this op touch, and how").
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Touch:
+    """One storage access (or the summary of a nested region's accesses).
+
+    ``banked_by``   region-arg values (loop IVs, including compile-time
+                    ``!hir.const`` unroll IVs) indexing *distributed* dims:
+                    distinct IV values select physically distinct banks.
+    ``addr_ivs``    region-arg values appearing anywhere in the address —
+                    iterations with different IV values touch different
+                    addresses.
+    ``private_to``  dynamic (non-const) IVs making the access
+                    iteration-private (no loop-carried memory dependence).
+    ``bank_consts`` literal constant indices of the distributed dims
+                    (``None`` where dynamic): two touches with a differing
+                    pair address provably distinct banks."""
+
+    storage: object          # alloc op or arg Value
+    is_write: bool
+    banked_by: frozenset     # IVs appearing in distributed dims
+    addr_ivs: frozenset      # IVs appearing anywhere in the address
+    private_to: frozenset    # IVs making the access iteration-private
+    bank_consts: tuple = ()  # constant distributed-dim indices (None if dyn)
+
+    def distinct_bank(self, other: "Touch") -> bool:
+        return any(
+            a is not None and b is not None and a != b
+            for a, b in zip(self.bank_consts, other.bank_consts)
+        )
+
+
+def storage_of(mem: Value):
+    """The physical storage a memref port belongs to: its defining alloc, or
+    the argument value itself for interface memrefs."""
+    d = mem.defining_op
+    return d if d is not None and d.opname == "alloc" else mem
+
+
+class MemTouches:
+    """Per-op memory-touch query with a cache for region summaries
+    (``ForOp`` touches are the union of their bodies').  Registered as the
+    ``mem-touch`` analysis; also usable standalone on unscheduled IR."""
+
+    def __init__(self):
+        self._loop_cache: dict[Operation, list[Touch]] = {}
+
+    def of(self, op: Operation) -> list[Touch]:
+        if op.opname in ("mem_read", "mem_write"):
+            mem = op.operands[0] if op.opname == "mem_read" else op.operands[1]
+            mt: MemrefType = mem.type  # type: ignore[assignment]
+            idx = ir.mem_op_indices(op)
+            region_args = [v for v in idx if v.defining_op is None]
+            # every region-arg index in a distributed dim selects a distinct
+            # bank per iteration — including compile-time-constant unroll IVs
+            # (the seed's dead `and False` clause dropped those, pessimizing
+            # legal unroll parallelism to staggered execution)
+            banked = frozenset(idx[d] for d in mt.distributed if idx[d].defining_op is None)
+            ivs = frozenset(region_args)
+            private = frozenset(v for v in region_args if not isinstance(v.type, ir.ConstType))
+            bank_consts = tuple(ir.const_value(idx[d]) for d in mt.distributed)
+            return [Touch(storage_of(mem), op.opname == "mem_write", banked, ivs,
+                          private, bank_consts)]
+        if op.opname == "call":
+            out = []
+            for v in op.operands:
+                if isinstance(v.type, MemrefType):
+                    out.append(Touch(storage_of(v), True, frozenset(), frozenset(), frozenset()))
+            return out
+        if isinstance(op, ForOp):
+            if op in self._loop_cache:
+                return self._loop_cache[op]
+            out = []
+            for b in op.region(0).ops:
+                out.extend(self.of(b))
+            self._loop_cache[op] = out
+            return out
+        return []
+
+
+# --------------------------------------------------------------------------
+# Dependence graph: SSA dataflow + memory edges with iteration distances
+# (lifted out of the HLS scheduler; shared with the pipeline-loop pass).
+# --------------------------------------------------------------------------
+
+
+class DepEdge(NamedTuple):
+    """``dst`` must start at least ``latency`` cycles after ``src`` (minus
+    ``distance`` * II when the edge is loop-carried)."""
+
+    src: Operation
+    dst: Operation
+    latency: int
+    distance: int
+
+
+def build_dependence_edges(
+    ops: list[Operation],
+    touches_of: Callable[[Operation], list[Touch]],
+    latency_of: Callable[[Operation], int],
+    loop: Optional[ForOp] = None,
+    carried: bool = False,
+) -> list[DepEdge]:
+    """Dependence edges among the ops of one region, in program order:
+
+      * SSA edges (producer -> consumer, weighted by the producer latency),
+        including uses held by ops nested inside a consumer's regions;
+      * memory edges per shared storage — conservative serialization, with
+        read-read pairs and provably-distinct banks exempt;
+      * distance-1 carried edges for non-iteration-private accesses and for
+        loop/call children that reoccupy their resources (``carried=True``).
+    """
+    edges: list[DepEdge] = []
+    producer: dict[Value, Operation] = {}
+    for o in ops:
+        for r in o.results:
+            producer[r] = o
+
+    def ssa_deps(o: Operation):
+        for v in o.operands:
+            if v in producer:
+                edges.append(DepEdge(producer[v], o, latency_of(producer[v]), 0))
+        if isinstance(o, ForOp):
+            for b in o.region(0).walk():
+                for v in b.operands:
+                    if v in producer and producer[v] is not o:
+                        edges.append(DepEdge(producer[v], o, latency_of(producer[v]), 0))
+
+    seen: list[Operation] = []
+    for o in ops:
+        ssa_deps(o)
+        to = touches_of(o)
+        if to:
+            for prev in seen:
+                tp = touches_of(prev)
+                for a in tp:
+                    for b in to:
+                        if a.storage is not b.storage:
+                            continue
+                        plain = (o.opname in ("mem_read", "mem_write")
+                                 and prev.opname in ("mem_read", "mem_write"))
+                        if plain and not a.is_write and not b.is_write:
+                            continue  # same-region read-read: MRT handles
+                        if plain and a.distinct_bank(b):
+                            continue  # physically parallel banks
+                        edges.append(DepEdge(prev, o, latency_of(prev), 0))
+                        if carried and plain and loop is not None:
+                            private = (loop.iv in a.private_to and loop.iv in b.private_to)
+                            if not private:
+                                edges.append(DepEdge(o, prev, latency_of(o), 1))
+                        break
+                    else:
+                        continue
+                    break
+            seen.append(o)
+        # sequential outer loops: a loop child reoccupies its resources
+        if carried and isinstance(o, ForOp):
+            edges.append(DepEdge(o, o, latency_of(o), 1))
+        if carried and o.opname == "call":
+            edges.append(DepEdge(o, o, 1, 1))
+    return edges
+
+
+def scheduled_op_latency(op: Operation, loops: dict[ForOp, LoopInfo]) -> int:
+    """Result latency of ``op`` under the standard timing model (RAM reads 1,
+    writes 1, delays their depth, calls their declared delay, loops their
+    statically-derived total latency)."""
+    if op.opname == "mem_read":
+        return op.operands[0].type.read_latency()
+    if op.opname == "mem_write":
+        return 1
+    if op.opname == "delay":
+        return op.attrs["by"]
+    if op.opname == "call":
+        ds = op.attrs.get("result_delays", ())
+        return max(ds) if ds else 0
+    if isinstance(op, ForOp):
+        li = loops.get(op)
+        return li.total_latency if li is not None and li.total_latency is not None else 1
+    if op.opname in ir.ARITH_OPS:
+        return op.attrs.get("stages", 0)
+    return 0
+
+
+@dataclass
+class DependenceInfo:
+    """Per-region dependence edges for the whole function; regions are keyed
+    by their owning op (the ``FuncOp`` for the body).  Innermost loop bodies
+    carry distance-1 edges (the pipelining candidates)."""
+
+    edges: dict[Operation, list[DepEdge]]
+    touches: MemTouches
+
+    def for_loop(self, loop: ForOp) -> list[DepEdge]:
+        return self.edges.get(loop, [])
+
+
+# --------------------------------------------------------------------------
+# Registered analyses
+# --------------------------------------------------------------------------
+
+
+@register_analysis
+class LoopAnalysis(FunctionAnalysis):
+    """``analyze_loops``: II / trip / body span / total latency per loop."""
+
+    name = "loop-info"
+
+    @staticmethod
+    def run(func: FuncOp, am: AnalysisManager) -> dict[ForOp, LoopInfo]:
+        return analyze_loops(func)
+
+
+@register_analysis
+class PortAccessAnalysis(FunctionAnalysis):
+    """``collect_port_accesses`` keyed on the cached loop analysis."""
+
+    name = "port-accesses"
+
+    @staticmethod
+    def run(func: FuncOp, am: AnalysisManager) -> dict[Value, list[MemAccess]]:
+        return collect_port_accesses(func, am.get(LoopAnalysis, func))
+
+
+@register_analysis
+class MemTouchAnalysis(FunctionAnalysis):
+    """Lazy memory-touch/banking table (see ``MemTouches``)."""
+
+    name = "mem-touch"
+
+    @staticmethod
+    def run(func: FuncOp, am: AnalysisManager) -> MemTouches:
+        return MemTouches()
+
+
+@register_analysis
+class DependenceAnalysis(FunctionAnalysis):
+    """Dependence edges for every region of the function, with carried
+    (distance-1) edges in innermost loop bodies."""
+
+    name = "dependence"
+
+    @staticmethod
+    def run(func: FuncOp, am: AnalysisManager) -> DependenceInfo:
+        touches = am.get(MemTouchAnalysis, func)
+        loops = am.get(LoopAnalysis, func)
+
+        def latency_of(op: Operation) -> int:
+            return scheduled_op_latency(op, loops)
+
+        edges: dict[Operation, list[DepEdge]] = {}
+
+        def visit(owner: Operation, region: Region) -> None:
+            loop = owner if isinstance(owner, ForOp) else None
+            inner = [o for o in region.ops
+                     if o.opname not in ("constant", "alloc", "yield", "return", "time")]
+            innermost = loop is not None and not any(isinstance(o, ForOp) for o in inner)
+            edges[owner] = build_dependence_edges(
+                inner, touches.of, latency_of, loop, carried=innermost)
+            for o in region.ops:
+                for r in o.regions:
+                    visit(o, r)
+
+        visit(func, func.body)
+        return DependenceInfo(edges, touches)

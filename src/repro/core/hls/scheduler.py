@@ -4,24 +4,29 @@ Vivado HLS comparison point (Tables 5 and 6).
 Given *unscheduled* HIR (see ``eraser``), this pipeline performs what a
 high-level synthesis compiler performs between its IR and RTL:
 
-  1. dependence analysis — SSA dataflow edges with operation latencies;
-     memory dependence edges per tensor (conservative serialization of
-     scopes that share storage, distance-1 carried dependences for
-     data-dependent addresses, none for iteration-private affine accesses);
+  1. dependence analysis — the shared ``core.analysis`` edge builder: SSA
+     dataflow edges with operation latencies; memory dependence edges per
+     tensor (conservative serialization of scopes that share storage,
+     distance-1 carried dependences for data-dependent addresses, none for
+     iteration-private affine accesses);
   2. operator chaining under a 200 MHz timing model (combinational delays
      accumulate along same-cycle chains up to the clock budget);
-  3. modulo scheduling of innermost loops — search II = 1, 2, ... with
-     resource-constrained list scheduling over a modulo reservation table
-     (one access per cycle per memref port); outer loops run sequentially
-     (II = iteration latency), Vivado-style;
+  3. modulo scheduling of innermost loops — search II = 1, 2, ... with the
+     shared ``core.schedule`` engine (resource-constrained list scheduling
+     over a modulo reservation table, one access per cycle per memref port
+     bank); outer loops run sequentially (II = iteration latency),
+     Vivado-style.  ``pipeline_loops=False`` disables the modulo search and
+     emits a fully sequential schedule — the input the ``pipeline-loop``
+     transform pass starts from;
   4. unroll-parallelism legality — an ``unroll_for``'s iterations run fully
      parallel (stagger 0) only if every touched storage is either banked by
-     the unroll IV (distributed-dim index) or broadcast (address independent
-     of the IV); otherwise iterations are staggered by the body span;
+     the unroll IV (distributed-dim index, including compile-time-constant
+     IVs) or broadcast (address independent of the IV); otherwise iterations
+     are staggered by the body span;
   5. SDC-style refinement — difference constraints relaxed to fixpoint
      (Bellman–Ford longest path), re-run after every reservation bump;
   6. pipeline balancing — ``hir.delay`` ops inserted so every operand arrives
-     exactly at its consumption cycle;
+     exactly at its consumption cycle (shared ``core.schedule.balance_delays``);
   7. emission — yields/iter offsets written back; the result is ordinary
      scheduled HIR consumed by the standard verifier + Verilog backend.
 
@@ -31,24 +36,13 @@ search (no artificial sleeps)."""
 
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass, field
 from typing import Optional
 
 from .. import ir
-from ..ir import ForOp, FuncOp, MemrefType, Module, Operation, Region, Time, Value
-
-# 200 MHz timing model: 5 ns budget per cycle, combinational delays in ns
-CLOCK_NS = 5.0
-COMB_DELAY = {
-    "add": 2.0, "sub": 2.0, "mult": 4.5, "div": 8.0,
-    "and": 0.5, "or": 0.5, "xor": 0.6, "not": 0.3,
-    "shl": 0.2, "shr": 0.2,
-    "cmp_lt": 1.6, "cmp_le": 1.6, "cmp_eq": 1.2, "cmp_ne": 1.2,
-    "cmp_gt": 1.6, "cmp_ge": 1.6,
-    "select": 0.9, "trunc": 0.0, "zext": 0.0, "sext": 0.1,
-}
-MAX_II = 256
+from ..analysis import MemTouches, build_dependence_edges
+from ..ir import ForOp, FuncOp, Module, Operation, Region, Time, Value
+from ..schedule import MAX_II, balance_delays, try_modulo_schedule
 
 
 @dataclass
@@ -63,28 +57,13 @@ class HLSResult:
     pass_manager: Optional[object] = None
 
 
-@dataclass(frozen=True)
-class _Touch:
-    storage: object          # alloc op or arg Value
-    is_write: bool
-    banked_by: frozenset     # IV Values appearing in distributed dims
-    addr_ivs: frozenset      # IV Values appearing anywhere in the address
-    private_to: frozenset    # IVs making the access iteration-private
-    bank_consts: tuple = ()  # constant distributed-dim indices (None if dyn)
-
-    def distinct_bank(self, other: "_Touch") -> bool:
-        return any(
-            a is not None and b is not None and a != b
-            for a, b in zip(self.bank_consts, other.bank_consts)
-        )
-
-
 class HLSScheduler:
-    def __init__(self, module: Module):
+    def __init__(self, module: Module, pipeline_loops: bool = True):
         self.module = module
+        self.pipeline_loops = pipeline_loops
         self.result = HLSResult(module)
         self.loop_latency: dict[ForOp, int] = {}
-        self.loop_touches: dict[ForOp, list[_Touch]] = {}
+        self.touches = MemTouches()
 
     # ------------------------------------------------------------------
     def run(self) -> HLSResult:
@@ -92,45 +71,8 @@ class HLSScheduler:
             if f.attrs.get("external"):
                 continue
             self._schedule_region(f, f.body, f.time_var, None)
-            self._insert_balancing_delays(f)
+            self.result.delays_inserted += balance_delays(f)
         return self.result
-
-    # -- storage / touch analysis ------------------------------------------
-    @staticmethod
-    def _storage_of(mem: Value):
-        d = mem.defining_op
-        return d if d is not None and d.opname == "alloc" else mem
-
-    def _touches(self, op: Operation) -> list[_Touch]:
-        if op.opname in ("mem_read", "mem_write"):
-            mem = op.operands[0] if op.opname == "mem_read" else op.operands[1]
-            mt: MemrefType = mem.type  # type: ignore[assignment]
-            idx = ir.mem_op_indices(op)
-            banked = frozenset(idx[d] for d in mt.distributed if idx[d].defining_op is None)
-            ivs = frozenset(v for v in idx if v.defining_op is None and not isinstance(v.type, ir.ConstType))
-            # constants in distributed dims also make banks distinct per
-            # unrolled iteration: track const-indexed too via the IV itself
-            banked_ivs = frozenset(v for v in banked if not isinstance(v.type, ir.ConstType)) | \
-                frozenset(idx[d] for d in mt.distributed if isinstance(idx[d].type, ir.ConstType) and False)
-            private = frozenset(v for v in idx if v.defining_op is None and not isinstance(v.type, ir.ConstType))
-            bank_consts = tuple(ir.const_value(idx[d]) for d in mt.distributed)
-            return [_Touch(self._storage_of(mem), op.opname == "mem_write", banked_ivs, ivs,
-                           private, bank_consts)]
-        if op.opname == "call":
-            out = []
-            for v in op.operands:
-                if isinstance(v.type, MemrefType):
-                    out.append(_Touch(self._storage_of(v), True, frozenset(), frozenset(), frozenset()))
-            return out
-        if isinstance(op, ForOp):
-            if op in self.loop_touches:
-                return self.loop_touches[op]
-            out = []
-            for b in op.region(0).ops:
-                out.extend(self._touches(b))
-            self.loop_touches[op] = out
-            return out
-        return []
 
     def _latency(self, op: Operation) -> int:
         if op.opname == "mem_read":
@@ -165,14 +107,16 @@ class HLSScheduler:
         ops = [o for o in region.ops
                if o.opname not in ("constant", "alloc", "yield", "return", "time")]
 
-        pipeline = (loop is not None and loop.opname == "for" and not has_loop_child)
-        edges = self._build_edges(ops, loop, carried=pipeline)
+        pipeline = (self.pipeline_loops and loop is not None
+                    and loop.opname == "for" and not has_loop_child)
+        edges = build_dependence_edges(ops, self.touches.of, self._latency,
+                                       loop, carried=pipeline)
 
         ii = 1 if pipeline else 0
         t: dict[Operation, int] = {}
         while True:
             self.result.search_iters += 1
-            got = self._try_schedule(ops, edges, ii)
+            got = try_modulo_schedule(ops, edges, ii, self._latency, self.touches.of)
             if got is not None:
                 t = got
                 break
@@ -214,7 +158,7 @@ class HLSScheduler:
         """Iterations run in parallel only if every storage touch is banked by
         the unroll IV or broadcast (IV-independent address)."""
         for o in ops:
-            for tch in self._touches(o):
+            for tch in self.touches.of(o):
                 if loop.iv in tch.banked_by:
                     continue  # distinct banks per iteration
                 if loop.iv not in tch.addr_ivs and not tch.is_write and not isinstance(o, ForOp) \
@@ -222,7 +166,7 @@ class HLSScheduler:
                     continue  # broadcast read: same address every iteration
                 if isinstance(o, ForOp):
                     # nested loop: examine its touches recursively (already in
-                    # tch via loop_touches); banked check above applies
+                    # tch via the MemTouches cache); banked check above applies
                     if loop.iv in tch.banked_by:
                         continue
                     if loop.iv not in tch.addr_ivs and not tch.is_write:
@@ -230,204 +174,12 @@ class HLSScheduler:
                 return max(1, span)
         return 0
 
-    # -- dependence edges -----------------------------------------------------
-    def _build_edges(self, ops: list[Operation], loop: Optional[ForOp], carried: bool):
-        edges: list[tuple[Operation, Operation, int, int]] = []
-        producer: dict[Value, Operation] = {}
-        for o in ops:
-            for r in o.results:
-                producer[r] = o
 
-        def ssa_deps(o: Operation):
-            for v in o.operands:
-                if v in producer:
-                    edges.append((producer[v], o, self._latency(producer[v]), 0))
-            if isinstance(o, ForOp):
-                for b in o.region(0).walk():
-                    for v in b.operands:
-                        if v in producer and producer[v] is not o:
-                            edges.append((producer[v], o, self._latency(producer[v]), 0))
-
-        seen: list[Operation] = []
-        for o in ops:
-            ssa_deps(o)
-            to = self._touches(o)
-            if to:
-                for prev in seen:
-                    tp = self._touches(prev)
-                    for a in tp:
-                        for b in to:
-                            if a.storage is not b.storage:
-                                continue
-                            plain = (o.opname in ("mem_read", "mem_write")
-                                     and prev.opname in ("mem_read", "mem_write"))
-                            if plain and not a.is_write and not b.is_write:
-                                continue  # same-region read-read: MRT handles
-                            if plain and a.distinct_bank(b):
-                                continue  # physically parallel banks
-                            edges.append((prev, o, self._latency(prev), 0))
-                            if carried and plain and loop is not None:
-                                private = (loop.iv in a.private_to and loop.iv in b.private_to)
-                                if not private:
-                                    edges.append((o, prev, self._latency(o), 1))
-                            break
-                        else:
-                            continue
-                        break
-                seen.append(o)
-            # sequential outer loops: a loop child reoccupies its resources
-            if carried and isinstance(o, ForOp):
-                edges.append((o, o, self._latency(o), 1))
-            if carried and o.opname == "call":
-                edges.append((o, o, 1, 1))
-        return edges
-
-    # -- core scheduling ---------------------------------------------------------
-    def _try_schedule(self, ops, edges, ii: int) -> Optional[dict[Operation, int]]:
-        t = {o: 0 for o in ops}
-        # horizon scales with total child latency (long-running loop children
-        # are legitimately serialized hundreds of cycles apart)
-        horizon = 4 * sum(max(1, self._latency(o)) for o in ops) + 512
-
-        def relax() -> bool:
-            for _ in range(len(ops) + 2):
-                changed = False
-                for (u, v, lat, dist) in edges:
-                    lo = t[u] + lat - (dist * ii if ii else 0)
-                    if dist and not ii:
-                        continue  # carried deps inactive outside pipelining
-                    if t[v] < lo:
-                        t[v] = lo
-                        changed = True
-                        if t[v] > horizon:
-                            return False
-                if not changed:
-                    return True
-            return False
-
-        if not relax():
-            return None
-
-        # operator chaining under the clock budget
-        arrival: dict[Operation, float] = {}
-        for o in sorted(ops, key=lambda o: t[o]):
-            start_ns = 0.0
-            for v in o.operands:
-                p = v.defining_op
-                if p in arrival and t.get(p) == t[o] and self._latency(p) == 0:
-                    start_ns = max(start_ns, arrival[p])
-            d = COMB_DELAY.get(o.opname, 0.0)
-            if start_ns + d > CLOCK_NS:
-                t[o] += 1
-                if not relax():
-                    return None
-                start_ns = 0.0
-            arrival[o] = start_ns + d
-
-        # modulo reservation table: one access per congruence class per port
-        # *bank* (distinct distributed-dim banks are physically parallel)
-        mem_like = [o for o in ops if o.opname in ("mem_read", "mem_write")]
-
-        def bank_key(o: Operation):
-            port = o.operands[0] if o.opname == "mem_read" else o.operands[1]
-            mt: MemrefType = port.type  # type: ignore[assignment]
-            idx = ir.mem_op_indices(o)
-            bank = tuple(
-                ir.const_value(idx[d]) if ir.const_value(idx[d]) is not None
-                else (idx[d].name if idx[d].defining_op is None else "?")
-                for d in mt.distributed
-            )
-            return port.id, bank
-
-        for _attempt in range(16 * len(ops) + 64):
-            mrt: dict[tuple, Operation] = {}
-            conflict = None
-            for o in mem_like:
-                pid, bank = bank_key(o)
-                cls = (t[o] % ii) if ii else t[o]
-                key = (pid, bank, cls)
-                if key in mrt and mrt[key] is not o:
-                    conflict = o
-                    break
-                mrt[key] = o
-            # loop children occupy their ports for their whole latency: treat
-            # any overlap of [t, t+lat) ranges on shared storage as conflicts
-            bump_to = None
-            if conflict is None and not ii:
-                loops_ = [o for o in ops if isinstance(o, ForOp) or o.opname == "call"]
-                for i in range(len(loops_)):
-                    for j in range(len(loops_)):
-                        if i == j:
-                            continue
-                        a, b = loops_[i], loops_[j]
-                        sa = {tc.storage for tc in self._touches(a)}
-                        sb = {tc.storage for tc in self._touches(b)}
-                        if not (sa & sb):
-                            continue
-                        a0, a1 = t[a], t[a] + max(1, self._latency(a))
-                        b0 = t[b]
-                        if a0 <= b0 < a1:
-                            conflict, bump_to = b, a1  # push past the occupant
-                            break
-                    if conflict is not None:
-                        break
-            if conflict is None:
-                break
-            t[conflict] = bump_to if bump_to is not None else t[conflict] + 1
-            if not relax():
-                return None
-            if max(t.values(), default=0) > horizon:
-                return None
-        else:
-            return None
-
-        for (u, v, lat, dist) in edges:
-            if dist and not ii:
-                continue
-            if t[v] < t[u] + lat - (dist * ii if ii else 0):
-                return None
-        return t
-
-    # -- balancing --------------------------------------------------------------
-    def _insert_balancing_delays(self, f: FuncOp) -> None:
-        from ..verifier import Verifier
-
-        for _ in range(256):
-            v = Verifier(f, strict_schedule=False)
-            v.run()
-            fixed = False
-            for op in list(f.body.walk()):
-                if op.start is None or op.opname in ("constant", "alloc", "time", "yield", "return"):
-                    continue
-                if isinstance(op, ForOp):
-                    continue
-                for i, val in enumerate(list(op.operands)):
-                    win = v.windows.get(val)
-                    if win is None:
-                        continue
-                    tv, off, ln = win
-                    use_off = op.start.offset
-                    if tv is op.start.tv and use_off > off and (ln is not None and use_off >= off + ln):
-                        d = ir.delay(val, use_off - off, Time(tv, off))
-                        region = op.parent_region or f.body
-                        try:
-                            pos = region.ops.index(op)
-                        except ValueError:
-                            continue
-                        region.ops.insert(pos, d)
-                        d.parent_region = region
-                        op.operands[i] = d.result
-                        self.result.delays_inserted += 1
-                        fixed = True
-                if fixed:
-                    break
-            if not fixed:
-                return
-
-
-def hls_schedule(module: Module) -> HLSResult:
-    """Schedule an unscheduled module in place."""
-    return HLSScheduler(module).run()
+def hls_schedule(module: Module, pipeline_loops: bool = True) -> HLSResult:
+    """Schedule an unscheduled module in place.  ``pipeline_loops=False``
+    skips the modulo-II search: every loop runs sequentially (II = body
+    span), the natural input for the ``pipeline-loop`` transform pass."""
+    return HLSScheduler(module, pipeline_loops=pipeline_loops).run()
 
 
 def hls_compile(module: Module, entry: Optional[str] = None,
@@ -438,17 +190,20 @@ def hls_compile(module: Module, entry: Optional[str] = None,
     ``pipeline`` is a textual PassManager spec (default: the paper-benchmark
     optimization pipeline); pass ``""`` to skip optimization.  The
     PassManager used is exposed on the returned HLSResult as
-    ``result.pass_manager`` for per-pass statistics."""
+    ``result.pass_manager`` for per-pass statistics (and its
+    ``.analysis_manager`` for analysis-cache statistics)."""
     from ..codegen import generate_verilog
-    from ..passmgr import DEFAULT_PIPELINE_SPEC, PassManager
+    from ..passmgr import DEFAULT_PIPELINE_SPEC, AnalysisManager, PassManager
     from ..verifier import verify
 
+    am = AnalysisManager()
     res = hls_schedule(module)
-    verify(module, strict_schedule=False, raise_on_error=False)
+    verify(module, strict_schedule=False, raise_on_error=False, am=am)
     spec = DEFAULT_PIPELINE_SPEC if pipeline is None else pipeline
+    pm = None
     if spec:
-        pm = PassManager.from_spec(spec)
+        pm = PassManager.from_spec(spec, analysis_manager=am)
         pm.run(module)
         res.pass_manager = pm
-    vs = generate_verilog(module, entry=entry)
+    vs = generate_verilog(module, entry=entry, am=am)
     return res, vs

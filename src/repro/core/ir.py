@@ -15,7 +15,6 @@ Nothing here depends on JAX; lowering lives in ``core.lower``.
 from __future__ import annotations
 
 import itertools
-import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Iterator, NamedTuple, Optional, Sequence, Union
 
@@ -945,7 +944,8 @@ def const_value(v: Value) -> Optional[Union[int, float]]:
 
 def _replace_all_uses_in_region(region: Region, old: Value, new: Value) -> int:
     """O(region) region-scoped replacement — retained only as the baseline
-    the legacy sweep benchmark measures.  New code wants
+    the legacy sweep benchmark measures (and it is scope-limited: uses held
+    by sibling scopes are silently missed).  New code wants
     ``old.replace_all_uses_with(new)`` (global, O(#uses))."""
     n = 0
     for op in region.walk():
@@ -954,28 +954,3 @@ def _replace_all_uses_in_region(region: Region, old: Value, new: Value) -> int:
                 op.operands[i] = new
                 n += 1
     return n
-
-
-def replace_all_uses(region: Region, old: Value, new: Value) -> int:
-    """DEPRECATED: replaces only the uses inside ``region``, silently missing
-    uses held by sibling scopes (e.g. a second top-level loop reading the
-    same value).  Use ``old.replace_all_uses_with(new)``, which is global and
-    O(#uses)."""
-    warnings.warn(
-        "replace_all_uses(region, old, new) is deprecated and unsafe: it misses "
-        "uses outside `region`; use old.replace_all_uses_with(new) instead",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return _replace_all_uses_in_region(region, old, new)
-
-
-def op_uses(region: Region, v: Value) -> list[Operation]:
-    """DEPRECATED: O(region) scan scoped to ``region``.  Use ``v.users()``
-    (global, O(#uses))."""
-    warnings.warn(
-        "op_uses(region, v) is deprecated; use v.users() instead",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return [op for op in region.walk() if any(o is v for o in op.operands)]

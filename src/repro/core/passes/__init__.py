@@ -24,6 +24,10 @@ Registered passes (spec names in parentheses — use them in
                      (pre-codegen)
   * unroll_loops    (``unroll``)          — full hir.unroll_for expansion
                      (pre-codegen)
+  * pipeline_loops  (``pipeline-loop``)   — minimum-II modulo pipelining of
+                     sequential innermost loops (schedule transform)
+  * retime          (``retime``)          — delay hoisting across
+                     combinational ops (shift-register sharing)
 
 Each pass also remains importable as a plain ``Callable[[Module], int]``
 (``canonicalize(module)`` etc.) for direct use and unit tests.
@@ -40,9 +44,10 @@ from __future__ import annotations
 from typing import Callable, Optional
 
 from ..ir import Module
-from ..passmgr import (CODEGEN_PIPELINE_SPEC, DEFAULT_PIPELINE_SPEC, Pass,
-                       PassManager, PassStatistics, create_pass,
-                       parse_pipeline_spec)
+from ..passmgr import (CODEGEN_PIPELINE_SPEC, DEFAULT_PIPELINE_SPEC,
+                       SCHEDULE_PIPELINE_SPEC, AnalysisManager,
+                       FunctionAnalysis, Pass, PassManager, PassStatistics,
+                       create_pass, parse_pipeline_spec, register_analysis)
 from .canonicalize import Canonicalize, ConstProp, DCE, canonicalize, constprop, dce
 from .cse import CSE, cse
 from .delay_elim import DelayElim, delay_elim
@@ -51,6 +56,7 @@ from .precision_opt import PrecisionOpt, precision_opt
 from .strength_reduce import StrengthReduce, strength_reduce
 from .inline import Inline, inline_calls
 from .unroll import Unroll, unroll_loops
+from .schedule_transforms import PipelineLoop, Retime, pipeline_loops, retime
 
 #: Legacy list-of-callables form of the default pipeline (kept for direct
 #: imports; the declarative form is ``DEFAULT_PIPELINE_SPEC``).
@@ -83,6 +89,10 @@ __all__ = [
     "DEFAULT_PIPELINE",
     "DEFAULT_PIPELINE_SPEC",
     "CODEGEN_PIPELINE_SPEC",
+    "SCHEDULE_PIPELINE_SPEC",
+    "AnalysisManager",
+    "FunctionAnalysis",
+    "register_analysis",
     "Pass",
     "PassManager",
     "PassStatistics",
@@ -98,6 +108,8 @@ __all__ = [
     "dce",
     "unroll_loops",
     "inline_calls",
+    "pipeline_loops",
+    "retime",
     "Canonicalize",
     "ConstProp",
     "CSE",
@@ -108,4 +120,6 @@ __all__ = [
     "DCE",
     "Inline",
     "Unroll",
+    "PipelineLoop",
+    "Retime",
 ]

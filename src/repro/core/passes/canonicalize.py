@@ -127,6 +127,9 @@ _CONSTFOLD_SET = RewritePatternSet([ConstFoldPattern()])
 @register_pass
 class Canonicalize(PatternRewritePass):
     name = "canonicalize"
+    # folded pure ops always complete no later than their consumers start, so
+    # loop spans / IIs and the port congruence classes are untouched
+    preserves = ("loop-info", "port-accesses")
 
     def patterns(self, func: FuncOp) -> RewritePatternSet:
         return _CANONICALIZE_SET
@@ -135,6 +138,7 @@ class Canonicalize(PatternRewritePass):
 @register_pass
 class ConstProp(PatternRewritePass):
     name = "constprop"
+    preserves = ("loop-info", "port-accesses")
 
     def patterns(self, func: FuncOp) -> RewritePatternSet:
         return _CONSTFOLD_SET

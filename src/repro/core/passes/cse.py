@@ -35,6 +35,9 @@ def _key(op: Operation):
 @register_pass
 class CSE(Pass):
     name = "cse"
+    # only pure ops merge (never memory accesses); merged ops share identical
+    # completion times, so schedules and port tables are unchanged
+    preserves = ("loop-info", "port-accesses")
 
     def run(self, module: Module) -> int:
         n = 0

@@ -62,6 +62,9 @@ _ZERO_DELAY_SET = RewritePatternSet([ZeroDelayForwardPattern()])
 @register_pass
 class DelayElim(Pass):
     name = "delay-elim"
+    # re-tapped chains keep every tap's absolute completion time; no memory
+    # ops are touched
+    preserves = ("loop-info", "port-accesses")
 
     def run(self, module: Module) -> int:
         n = 0

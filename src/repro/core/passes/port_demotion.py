@@ -21,7 +21,7 @@ from __future__ import annotations
 from typing import Optional
 
 from .. import ir
-from ..analysis import MemAccess, analyze_loops, collect_port_accesses
+from ..analysis import MemAccess
 from ..ir import ForOp, FuncOp, Module, Value
 
 
@@ -77,38 +77,43 @@ def _disjoint(func: FuncOp, a: MemAccess, b: MemAccess) -> bool:
     return _roots_ordered(func, a.root, b.root)
 
 
-def port_demotion(module: Module) -> int:
+def _demote_func(f: FuncOp, accesses: dict[Value, list[MemAccess]]) -> int:
     n = 0
-    for f in module.funcs.values():
-        if f.attrs.get("external"):
+    for op in f.body.walk():
+        if op.opname != "alloc" or op.attrs.get("single_port") or len(op.results) < 2:
             continue
-        loops = analyze_loops(f)
-        accesses = collect_port_accesses(f, loops)
-        for op in f.body.walk():
-            if op.opname != "alloc" or op.attrs.get("single_port") or len(op.results) < 2:
-                continue
-            reads: list[MemAccess] = []
-            writes: list[MemAccess] = []
-            for port in op.results:
-                for acc in accesses.get(port, []):
-                    (writes if acc.is_write else reads).append(acc)
-            if not reads or not writes:
-                continue
-            if all(_disjoint(f, r, w) for r in reads for w in writes):
-                op.attrs["single_port"] = True
-                n += 1
+        reads: list[MemAccess] = []
+        writes: list[MemAccess] = []
+        for port in op.results:
+            for acc in accesses.get(port, []):
+                (writes if acc.is_write else reads).append(acc)
+        if not reads or not writes:
+            continue
+        if all(_disjoint(f, r, w) for r in reads for w in writes):
+            op.attrs["single_port"] = True
+            n += 1
     return n
 
 
 from ..passmgr import Pass, register_pass  # noqa: E402
+from ..analysis import PortAccessAnalysis  # noqa: E402
 
 
 @register_pass
 class PortDemotion(Pass):
     """Schedule-disjointness proof over whole functions (not a local
-    pattern)."""
+    pattern); the schedule/port tables come from the shared analysis cache
+    (computed by the verifier or a prior pass, reused here)."""
 
     name = "port-demotion"
+    preserves_all = True  # attribute-only rewrite (alloc "single_port")
 
     def run(self, module: Module) -> int:
-        return port_demotion(module)
+        n = 0
+        for f in self.each_func(module):
+            n += _demote_func(f, self.get_analysis(PortAccessAnalysis, f))
+        return n
+
+
+def port_demotion(module: Module) -> int:
+    return PortDemotion().run(module)

@@ -144,6 +144,7 @@ class PrecisionOpt(Pass):
     a local pattern)."""
 
     name = "precision-opt"
+    preserves_all = True  # narrows types in place; schedules/IR shape untouched
 
     def run(self, module: Module) -> int:
         return precision_opt(module)

@@ -81,6 +81,8 @@ class DivStrengthReducePattern(RewritePattern):
 @register_pass
 class StrengthReduce(PatternRewritePass):
     name = "strength-reduce"
+    # in-place opname/attr rewrites of comb ops at unchanged schedules
+    preserves = ("loop-info", "port-accesses")
 
     def __init__(self):
         self._mult = MultStrengthReducePattern(set())

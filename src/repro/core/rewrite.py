@@ -90,6 +90,13 @@ class PatternRewriter:
         self._driver.enqueue(op)
         return op
 
+    def insert_after(self, anchor: Operation, op: Operation) -> Operation:
+        region = anchor.parent_region
+        assert region is not None, "anchor is detached"
+        region.insert(region.ops.index(anchor) + 1, op)
+        self._driver.enqueue(op)
+        return op
+
     def insert_at_start(self, region: Region, op: Operation) -> Operation:
         region.insert(0, op)
         self._driver.enqueue(op)

@@ -1,0 +1,197 @@
+"""Shared schedule math: the 200 MHz timing model, SDC-style difference
+constraint relaxation, the modulo-reservation scheduling engine, and pipeline
+balancing (``hir.delay`` insertion).
+
+Two consumers share this module:
+
+  * the HLS baseline (``core.hls.scheduler``) — the paper's Vivado stand-in,
+    which must *search* for a schedule starting from erased IR;
+  * the schedule-transform passes (``core.passes.schedule_transforms``) —
+    which re-schedule already-legal HIR (pipeline-loop / retime) as ordinary
+    IR transformations over the cached analyses, the paper's actual pitch.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+from . import ir
+from .analysis import DepEdge, Touch
+from .ir import ForOp, FuncOp, MemrefType, Operation, Time
+
+# 200 MHz timing model: 5 ns budget per cycle, combinational delays in ns
+CLOCK_NS = 5.0
+COMB_DELAY = {
+    "add": 2.0, "sub": 2.0, "mult": 4.5, "div": 8.0,
+    "and": 0.5, "or": 0.5, "xor": 0.6, "not": 0.3,
+    "shl": 0.2, "shr": 0.2,
+    "cmp_lt": 1.6, "cmp_le": 1.6, "cmp_eq": 1.2, "cmp_ne": 1.2,
+    "cmp_gt": 1.6, "cmp_ge": 1.6,
+    "select": 0.9, "trunc": 0.0, "zext": 0.0, "sext": 0.1,
+}
+MAX_II = 256
+
+
+def access_bank_key(op: Operation):
+    """(port id, distributed-dim bank selector) of a memory access: two
+    accesses with different keys use physically distinct ports/banks and
+    never conflict in the modulo reservation table."""
+    port = op.operands[0] if op.opname == "mem_read" else op.operands[1]
+    mt: MemrefType = port.type  # type: ignore[assignment]
+    idx = ir.mem_op_indices(op)
+    bank = tuple(
+        ir.const_value(idx[d]) if ir.const_value(idx[d]) is not None
+        else (idx[d].name if idx[d].defining_op is None else "?")
+        for d in mt.distributed
+    )
+    return port.id, bank
+
+
+def try_modulo_schedule(
+    ops: list[Operation],
+    edges: Sequence[DepEdge],
+    ii: int,
+    latency_of: Callable[[Operation], int],
+    touches_of: Callable[[Operation], list[Touch]],
+) -> Optional[dict[Operation, int]]:
+    """Resource-constrained list scheduling at a fixed ``ii`` (0 = no
+    pipelining): Bellman–Ford longest-path relaxation of the dependence
+    difference constraints, operator chaining under the clock budget, and a
+    modulo reservation table (one access per congruence class per memref
+    port bank).  Returns op -> cycle, or None if infeasible."""
+    t = {o: 0 for o in ops}
+    # horizon scales with total child latency (long-running loop children
+    # are legitimately serialized hundreds of cycles apart)
+    horizon = 4 * sum(max(1, latency_of(o)) for o in ops) + 512
+
+    def relax() -> bool:
+        for _ in range(len(ops) + 2):
+            changed = False
+            for (u, v, lat, dist) in edges:
+                lo = t[u] + lat - (dist * ii if ii else 0)
+                if dist and not ii:
+                    continue  # carried deps inactive outside pipelining
+                if t[v] < lo:
+                    t[v] = lo
+                    changed = True
+                    if t[v] > horizon:
+                        return False
+            if not changed:
+                return True
+        return False
+
+    if not relax():
+        return None
+
+    # operator chaining under the clock budget
+    arrival: dict[Operation, float] = {}
+    for o in sorted(ops, key=lambda o: t[o]):
+        start_ns = 0.0
+        for v in o.operands:
+            p = v.defining_op
+            if p in arrival and t.get(p) == t[o] and latency_of(p) == 0:
+                start_ns = max(start_ns, arrival[p])
+        d = COMB_DELAY.get(o.opname, 0.0)
+        if start_ns + d > CLOCK_NS:
+            t[o] += 1
+            if not relax():
+                return None
+            start_ns = 0.0
+        arrival[o] = start_ns + d
+
+    # modulo reservation table: one access per congruence class per port
+    # *bank* (distinct distributed-dim banks are physically parallel)
+    mem_like = [o for o in ops if o.opname in ("mem_read", "mem_write")]
+
+    for _attempt in range(16 * len(ops) + 64):
+        mrt: dict[tuple, Operation] = {}
+        conflict = None
+        for o in mem_like:
+            pid, bank = access_bank_key(o)
+            cls = (t[o] % ii) if ii else t[o]
+            key = (pid, bank, cls)
+            if key in mrt and mrt[key] is not o:
+                conflict = o
+                break
+            mrt[key] = o
+        # loop children occupy their ports for their whole latency: treat
+        # any overlap of [t, t+lat) ranges on shared storage as conflicts
+        bump_to = None
+        if conflict is None and not ii:
+            loops_ = [o for o in ops if isinstance(o, ForOp) or o.opname == "call"]
+            for i in range(len(loops_)):
+                for j in range(len(loops_)):
+                    if i == j:
+                        continue
+                    a, b = loops_[i], loops_[j]
+                    sa = {tc.storage for tc in touches_of(a)}
+                    sb = {tc.storage for tc in touches_of(b)}
+                    if not (sa & sb):
+                        continue
+                    a0, a1 = t[a], t[a] + max(1, latency_of(a))
+                    b0 = t[b]
+                    if a0 <= b0 < a1:
+                        conflict, bump_to = b, a1  # push past the occupant
+                        break
+                if conflict is not None:
+                    break
+        if conflict is None:
+            break
+        t[conflict] = bump_to if bump_to is not None else t[conflict] + 1
+        if not relax():
+            return None
+        if max(t.values(), default=0) > horizon:
+            return None
+    else:
+        return None
+
+    for (u, v, lat, dist) in edges:
+        if dist and not ii:
+            continue
+        if t[v] < t[u] + lat - (dist * ii if ii else 0):
+            return None
+    return t
+
+
+def balance_delays(func: FuncOp, am=None) -> int:
+    """Pipeline balancing: insert ``hir.delay`` ops so every operand arrives
+    exactly at its consumption cycle (the transformation that legalises a
+    freshly computed schedule).  Uses the verifier's validity windows;
+    ``am`` (an AnalysisManager) lets the repeated verification re-use the
+    cached loop analysis across fixpoint iterations.  Returns the number of
+    delays inserted."""
+    from .verifier import Verifier
+
+    inserted = 0
+    for _ in range(256):
+        v = Verifier(func, strict_schedule=False, am=am)
+        v.run()
+        fixed = False
+        for op in list(func.body.walk()):
+            if op.start is None or op.opname in ("constant", "alloc", "time", "yield", "return"):
+                continue
+            if isinstance(op, ForOp):
+                continue
+            for i, val in enumerate(list(op.operands)):
+                win = v.windows.get(val)
+                if win is None:
+                    continue
+                tv, off, ln = win
+                use_off = op.start.offset
+                if tv is op.start.tv and use_off > off and (ln is not None and use_off >= off + ln):
+                    d = ir.delay(val, use_off - off, Time(tv, off))
+                    region = op.parent_region or func.body
+                    try:
+                        pos = region.ops.index(op)
+                    except ValueError:
+                        continue
+                    region.ops.insert(pos, d)
+                    d.parent_region = region
+                    op.operands[i] = d.result
+                    inserted += 1
+                    fixed = True
+            if fixed:
+                break
+        if not fixed:
+            return inserted
+    return inserted

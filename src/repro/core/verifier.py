@@ -24,8 +24,11 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from . import ir
-from .analysis import LoopInfo, analyze_loops, collect_port_accesses
+from .analysis import (LoopAnalysis, LoopInfo, PortAccessAnalysis,
+                       analyze_loops, collect_port_accesses,
+                       span_completion_offset)
 from .ir import CONST, ForOp, FuncOp, Module, Operation, Region, Time, Value
+from .passmgr import AnalysisManager
 
 
 @dataclass
@@ -52,9 +55,11 @@ OPERAND_DESC = {0: "left operand", 1: "right operand", 2: "third operand"}
 
 
 class Verifier:
-    def __init__(self, func: FuncOp, strict_schedule: bool = True):
+    def __init__(self, func: FuncOp, strict_schedule: bool = True,
+                 am: Optional[AnalysisManager] = None):
         self.func = func
         self.strict = strict_schedule
+        self.am = am  # shared analysis cache (loop info, port accesses)
         self.diags: list[Diagnostic] = []
         self.loops: dict[ForOp, LoopInfo] = {}
         # validity windows: value -> (root tv, birth offset, window len | None=inf)
@@ -69,7 +74,9 @@ class Verifier:
 
     # ------------------------------------------------------------------
     def run(self) -> list[Diagnostic]:
-        self.loops = analyze_loops(self.func)
+        self.loops = (self.am.get(LoopAnalysis, self.func) if self.am is not None
+                      else analyze_loops(self.func))
+        self._iv_loop = {l.iv: li for l, li in self.loops.items()}
         self._build_root_tree()
         self._compute_windows()
         self._verify_region(self.func.body, scope_tvs={self.func.time_var})
@@ -209,6 +216,20 @@ class Verifier:
                 d = self._min_abs_offset(use_time.tv, tv)
                 if d is not None and d + use_time.offset >= off:
                     return
+            else:
+                # sequential loop IV (II >= body span, HLS-style yield on the
+                # loop's own time variable): iterations never overlap and
+                # every nested scope completes within the iteration window,
+                # so descendant-scope uses after the birth are safe.  Only
+                # sound when the span actually bounds the whole body — a
+                # nested scope whose latency is not statically derivable is
+                # silently absent from body_span and may outlive the window.
+                li = self._iv_loop.get(v)
+                if li is not None and li.ii is not None and li.ii >= li.body_span \
+                        and self._body_statically_bounded(li.op):
+                    d = self._min_abs_offset(use_time.tv, tv)
+                    if d is not None and d + use_time.offset >= off:
+                        return
             self.error(
                 op.loc,
                 f"Schedule error: operand {desc} is defined under time variable "
@@ -225,6 +246,29 @@ class Verifier:
                 f"Schedule error: mismatched delay ({off} vs {u}) in {desc}!",
                 notes=self._def_note(v),
             )
+
+    def _body_statically_bounded(self, loop: ForOp) -> bool:
+        """True iff every scheduled child of ``loop``'s body has a completion
+        offset that ``analyze_loops`` could derive (and therefore included in
+        ``body_span``) — the precondition for treating II >= span as "the
+        iteration window contains everything"."""
+        cached = getattr(self, "_bounded_cache", None)
+        if cached is None:
+            cached = self._bounded_cache = {}
+        if loop in cached:
+            return cached[loop]
+        root = loop.time_var
+        ok = True
+        for op in loop.region(0).ops:
+            if op.opname in ("constant", "alloc", "time", "return"):
+                continue
+            if op.start is None and not isinstance(op, ForOp):
+                continue  # unscheduled comb op: anchored via its consumers
+            if span_completion_offset(op, root, self.loops) is None:
+                ok = False
+                break
+        cached[loop] = ok
+        return ok
 
     def _def_note(self, v: Value) -> list[tuple[ir.Loc, str]]:
         d = v.defining_op
@@ -331,7 +375,8 @@ class Verifier:
 
     # -- memory port conflicts ------------------------------------------------
     def _verify_ports(self) -> None:
-        accesses = collect_port_accesses(self.func, self.loops)
+        accesses = (self.am.get(PortAccessAnalysis, self.func) if self.am is not None
+                    else collect_port_accesses(self.func, self.loops))
         for port, accs in accesses.items():
             for i in range(len(accs)):
                 for j in range(i + 1, len(accs)):
@@ -377,11 +422,15 @@ class Verifier:
         return False
 
 
-def verify_func(func: FuncOp, strict_schedule: bool = True) -> list[Diagnostic]:
-    return Verifier(func, strict_schedule).run()
+def verify_func(func: FuncOp, strict_schedule: bool = True,
+                am: Optional[AnalysisManager] = None) -> list[Diagnostic]:
+    return Verifier(func, strict_schedule, am=am).run()
 
 
-def verify(module_or_func, strict_schedule: bool = True, raise_on_error: bool = True) -> list[Diagnostic]:
+def verify(module_or_func, strict_schedule: bool = True, raise_on_error: bool = True,
+           am: Optional[AnalysisManager] = None) -> list[Diagnostic]:
+    """Verify a module or function.  ``am`` shares the cached loop/port
+    analyses with the optimizer and codegen (see ``core.passmgr``)."""
     funcs = (
         [module_or_func]
         if isinstance(module_or_func, FuncOp)
@@ -389,7 +438,7 @@ def verify(module_or_func, strict_schedule: bool = True, raise_on_error: bool = 
     )
     diags: list[Diagnostic] = []
     for f in funcs:
-        diags.extend(verify_func(f, strict_schedule))
+        diags.extend(verify_func(f, strict_schedule, am=am))
     errs = [d for d in diags if d.severity == "error"]
     if errs and raise_on_error:
         raise VerifyError(errs)

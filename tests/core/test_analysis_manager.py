@@ -1,0 +1,147 @@
+"""AnalysisManager semantics: construct-on-demand caching, hit statistics,
+and preserve/invalidate behavior driven by the PassManager — a pass that
+preserves an analysis must not trigger recomputation; one that doesn't must;
+a pass reporting 0 rewrites preserves everything implicitly."""
+
+import pytest
+
+from repro.core import ir, verifier
+from repro.core.analysis import (DependenceAnalysis, LoopAnalysis,
+                                 MemTouchAnalysis, PortAccessAnalysis)
+from repro.core.gallery import GALLERY
+from repro.core.passmgr import AnalysisManager, Pass, PassManager
+
+
+def _func(name="stencil1d"):
+    m, entry = GALLERY[name].build()
+    return m, m.get(entry)
+
+
+def test_get_computes_once_then_hits():
+    m, f = _func()
+    am = AnalysisManager()
+    r1 = am.get(LoopAnalysis, f)
+    r2 = am.get(LoopAnalysis, f)
+    assert r1 is r2
+    st = am.stats["loop-info"]
+    assert st.computed == 1 and st.hits == 1
+    assert am.stats_dict()["hits"] == 1
+
+
+def test_get_by_name_and_unknown_name():
+    m, f = _func()
+    am = AnalysisManager()
+    assert am.get("loop-info", f) is am.get(LoopAnalysis, f)
+    with pytest.raises(ValueError, match="unknown analysis"):
+        am.get("frobnicate", f)
+
+
+def test_dependent_analyses_share_the_cache():
+    """port-accesses / dependence pull loop-info & mem-touch through the
+    manager, so a later direct query is a hit, not a recomputation."""
+    m, f = _func()
+    am = AnalysisManager()
+    am.get(PortAccessAnalysis, f)
+    am.get(DependenceAnalysis, f)
+    assert am.stats["loop-info"].computed == 1
+    assert am.stats["loop-info"].hits >= 1
+    am.get(MemTouchAnalysis, f)
+    assert am.stats["mem-touch"].computed == 1
+    assert am.stats["mem-touch"].hits == 1
+
+
+def test_invalidate_respects_preserve_sets():
+    m, f = _func()
+    am = AnalysisManager()
+    am.get(LoopAnalysis, f)
+    am.get(MemTouchAnalysis, f)
+    am.invalidate(preserve=("loop-info",))
+    assert am.cached(LoopAnalysis, f) is not None
+    assert am.cached(MemTouchAnalysis, f) is None
+    assert am.invalidate(preserve_all=True) == 0  # no-op
+    am.invalidate()
+    assert am.cached(LoopAnalysis, f) is None
+
+
+def test_invalidate_scoped_to_one_func():
+    m1, f1 = _func("stencil1d")
+    m2, f2 = _func("conv2d")
+    am = AnalysisManager()
+    am.get(LoopAnalysis, f1)
+    am.get(LoopAnalysis, f2)
+    am.invalidate(func=f1)
+    assert am.cached(LoopAnalysis, f1) is None
+    assert am.cached(LoopAnalysis, f2) is not None
+
+
+class _RewritingPass(Pass):
+    """Claims one rewrite per run without touching the IR (cache probe)."""
+
+    name = "probe-rewrite"
+
+    def run(self, module):
+        return 1
+
+
+class _PreservingPass(_RewritingPass):
+    name = "probe-preserving"
+    preserves = ("loop-info",)
+
+
+class _CleanPass(Pass):
+    name = "probe-clean"
+
+    def run(self, module):
+        return 0
+
+
+def _pm_with_warm_cache(passes, func):
+    am = AnalysisManager()
+    am.get(LoopAnalysis, func)
+    am.get(MemTouchAnalysis, func)
+    return PassManager(passes, fixpoint=False, analysis_manager=am), am
+
+
+def test_pass_that_preserves_does_not_trigger_recomputation():
+    m, f = _func()
+    pm, am = _pm_with_warm_cache([_PreservingPass()], f)
+    pm.run(m)
+    assert am.cached(LoopAnalysis, f) is not None  # preserved across the rewrite
+    assert am.cached(MemTouchAnalysis, f) is None  # not in the preserve set
+    before = am.stats["loop-info"].computed
+    am.get(LoopAnalysis, f)
+    assert am.stats["loop-info"].computed == before  # cache hit, no recompute
+
+
+def test_pass_that_does_not_preserve_invalidates():
+    m, f = _func()
+    pm, am = _pm_with_warm_cache([_RewritingPass()], f)
+    pm.run(m)
+    assert am.cached(LoopAnalysis, f) is None
+    before = am.stats["loop-info"].computed
+    am.get(LoopAnalysis, f)
+    assert am.stats["loop-info"].computed == before + 1  # recomputed
+
+
+def test_clean_pass_preserves_everything_implicitly():
+    m, f = _func()
+    pm, am = _pm_with_warm_cache([_CleanPass()], f)
+    pm.run(m)
+    assert am.cached(LoopAnalysis, f) is not None
+    assert am.cached(MemTouchAnalysis, f) is not None
+
+
+def test_verifier_and_pipeline_share_one_cache():
+    """The codegen_speed flow: verify computes loop-info/port-accesses, the
+    default pipeline's port-demotion re-uses them through the shared
+    AnalysisManager (>= 1 hit across the pipeline)."""
+    from repro.core.passes import DEFAULT_PIPELINE_SPEC
+
+    m, entry = GALLERY["histogram"].build()
+    am = AnalysisManager()
+    verifier.verify(m, am=am)
+    pm = PassManager.from_spec(DEFAULT_PIPELINE_SPEC, analysis_manager=am)
+    stats = pm.run(m)
+    assert stats.get("port_demotion", 0) >= 1
+    assert am.stats_dict()["hits"] >= 1
+    assert am.stats["port-accesses"].hits >= 1

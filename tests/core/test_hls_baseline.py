@@ -52,6 +52,54 @@ def test_hls_respects_rmw_recurrence():
     assert res.iis.get("i", 0) >= 2
 
 
+def test_unroll_iv_banked_writes_run_parallel():
+    """Regression for the dead `and False` clause in the old touch analysis:
+    an unroll IV indexing a *distributed* dim selects a distinct bank per
+    iteration, so iterations are legal in parallel (stagger 0) even for
+    writes.  The bug pessimized them to staggered execution."""
+    from repro.core import ir
+    from repro.core.builder import Builder
+
+    b = Builder(ir.Module("m"))
+    regs = ir.MemrefType((8,), ir.i32, packed=[], kind=ir.KIND_REG)
+    with b.func("f", [], []) as f:
+        Rr, Rw = b.alloc(regs, names=["Rr", "Rw"])
+        with b.for_(0, 8, 1, at=f.t + 1, unroll=True, iv_name="u") as lu:
+            b.yield_(at=lu.time)
+            b.write(7, Rw, [lu.iv], at=lu.time)
+        b.ret()
+    um = erase_schedule(b.module)
+    hls_schedule(um)
+    loop = next(op for op in um.get("f").body.walk() if isinstance(op, ir.ForOp))
+    y = loop.yield_op()
+    assert y.start.tv is loop.time_var and y.start.offset == 0  # fully parallel
+
+
+def test_gemm_accumulator_unrolls_are_parallel_banked():
+    """Gallery-level regression: in the HLS-rescheduled GEMM the
+    accumulator-zeroing and PE-compute unroll loops write a fully distributed
+    register bank indexed by their unroll IVs — distinct banks, stagger 0 —
+    while the single-ported drain loop stays staggered."""
+    from repro.core import ir
+
+    m, entry = GALLERY["gemm"].build()
+    um = erase_schedule(m)
+    hls_schedule(um)
+    f = um.get(entry)
+    staggers = {}
+    for op in f.body.walk():
+        if isinstance(op, ir.ForOp) and op.opname == "unroll_for":
+            y = op.yield_op()
+            staggers[op.iv.name] = y.start.offset if y.start.tv is op.time_var else None
+    assert staggers["zi"] == 0 and staggers["zj"] == 0  # banked writes: parallel
+    assert staggers["pi"] == 0 and staggers["pj"] == 0  # PE grid: parallel
+    assert staggers["di"] > 0  # drain shares one output port: staggered
+    # and the re-scheduled design still computes the right answer
+    ins = GALLERY["gemm"].make_inputs()
+    simulate(um, entry, ins)
+    np.testing.assert_array_equal(ins[-1], GALLERY["gemm"].oracle(*ins[:2]))
+
+
 def test_explicit_schedule_verification_beats_schedule_search():
     """The Table 6 mechanism: with explicit schedules the compiler only
     *verifies* (linear passes); the HLS baseline must *search* (II loop,

@@ -1,8 +1,6 @@
 """Use-def chain maintenance invariants (the core of the compiler-infra PR):
 operand mutation, op erasure and RAUW must keep ``Value`` use lists exact."""
 
-import warnings
-
 import pytest
 
 from repro.core import ir
@@ -92,8 +90,16 @@ def test_erase_drops_uses_recursively():
     assert loop not in func.body.ops
 
 
+def test_deprecated_region_scoped_shims_removed():
+    """The deprecated region-scoped ``replace_all_uses`` / ``op_uses`` shims
+    are gone; only the private legacy-sweep baseline helper remains."""
+    assert not hasattr(ir, "replace_all_uses")
+    assert not hasattr(ir, "op_uses")
+    assert callable(ir._replace_all_uses_in_region)  # legacy-sweep baseline
+
+
 def test_rauw_is_global_across_sibling_scopes():
-    """The satellite fix: the deprecated region-scoped helper silently loses
+    """Region-scoped replacement (the legacy-sweep baseline) silently loses
     uses in sibling scopes; Value.replace_all_uses_with is global."""
     b = Builder(ir.Module("m"))
     r = ir.MemrefType((8,), ir.i32, ir.PORT_R)
@@ -114,11 +120,8 @@ def test_rauw_is_global_across_sibling_scopes():
     v = next(op for op in func.body.ops if op.opname == "mem_read").result
     replacement = ir.Value(v.type, "fresh")
 
-    # old helper, scoped to the first loop's region: loses the sibling use
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        n_old = ir.replace_all_uses(loops[0].region(0), v, replacement)
-        assert any(issubclass(c.category, DeprecationWarning) for c in caught)
+    # scoped baseline, limited to the first loop's region: loses the sibling use
+    n_old = ir._replace_all_uses_in_region(loops[0].region(0), v, replacement)
     assert n_old == 1
     assert v.has_uses(), "old helper left the sibling-scope use dangling"
     leftover = [u.op.opname for u in v.uses]

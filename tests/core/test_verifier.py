@@ -150,3 +150,43 @@ def test_diagnostics_render_with_locations():
     rendered = errs[0].render()
     assert "array_add.py" in rendered
     assert "note: Prior definition here." in rendered
+
+
+def test_sequential_iv_allowed_in_bounded_nested_scope():
+    """HLS-style sequential loop (yield on its own tv, II >= body span) with
+    a statically-bounded inner loop: the inner scope's use of the outer IV is
+    legal — iterations never overlap and the inner loop completes within the
+    iteration window."""
+    b = Builder(ir.Module("seqiv"))
+    w = ir.MemrefType((8, 8), ir.i32, ir.PORT_W)
+    with b.func("f", [w], ["O"]) as f:
+        (O,) = f.args
+        with b.for_(0, 4, 1, at=f.t + 1, iv_name="r", tv_name="tr") as lr:
+            b.yield_(at=lr.time + 10)  # II = 10 >= span (HLS sequential form)
+            with b.for_(0, 4, 1, at=lr.time + 1, iv_name="c", tv_name="tc") as lc:
+                b.yield_(at=lc.time + 1)
+                i1 = b.delay(lc.iv, 1, at=lc.time)
+                b.write(0, O, [lr.iv, i1], at=lc.time + 1)  # outer IV, inner scope
+        b.ret()
+    assert _errors(b.module) == []
+
+
+def test_sequential_iv_rejected_when_nested_scope_unbounded():
+    """Same shape, but the inner loop's trip count is dynamic: its latency is
+    not statically derivable, so it is absent from the outer body span and
+    may outlive the IV's validity window — the use must still be flagged."""
+    b = Builder(ir.Module("seqiv_dyn"))
+    r = ir.MemrefType((1,), ir.i32, ir.PORT_R)
+    w = ir.MemrefType((8, 8), ir.i32, ir.PORT_W)
+    with b.func("f", [r, w], ["N", "O"]) as f:
+        N, O = f.args
+        n = b.read(N, [0], at=f.t)  # dynamic bound -> trip count unknown
+        with b.for_(0, 4, 1, at=f.t + 1, iv_name="r", tv_name="tr") as lr:
+            b.yield_(at=lr.time + 10)
+            with b.for_(0, n, 1, at=lr.time + 1, iv_name="c", tv_name="tc") as lc:
+                b.yield_(at=lc.time + 1)
+                i1 = b.delay(lc.iv, 1, at=lc.time)
+                b.write(0, O, [lr.iv, i1], at=lc.time + 1)
+        b.ret()
+    errs = _errors(b.module)
+    assert any("%tr" in e.message and "%tc" in e.message for e in errs)

@@ -25,7 +25,6 @@ def _run(code: str) -> str:
 MINI = """
 import jax, json
 import jax.numpy as jnp
-from jax.sharding import AxisType
 from repro.configs.base import ShapeCfg
 from repro.configs.registry import get_smoke_config
 from repro.launch import hlo_analysis
@@ -37,8 +36,9 @@ from repro.train.steps import make_serve_step, make_train_step
 
 cfg = get_smoke_config({arch!r})
 shape = ShapeCfg("mini", seq_len=16, global_batch=8, kind={kind!r})
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(AxisType.Auto,) * 3)
+# version-compatible mesh helper (AxisType only exists on jax >= 0.5)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 rules = rules_for(cfg, mesh, {mode!r}, batch=8)
 with use_rules(rules, mesh):
     args, in_sh, out_sh = cell_abstract_inputs(cfg, shape, rules, mesh)
