@@ -34,7 +34,8 @@ from repro.core.codegen.verilog import generate_verilog
 from repro.core.gallery import GALLERY, PAPER_BENCHMARKS
 from repro.core.hls.eraser import erase_schedule
 from repro.core.hls.scheduler import hls_schedule
-from repro.core.passes import AnalysisManager, DEFAULT_PIPELINE_SPEC, PassManager
+from repro.core.passes import (AnalysisManager, DEFAULT_PIPELINE_SPEC,
+                               RTL_PIPELINE_SPEC, PassManager)
 from repro.core.passes.legacy_sweep import run_legacy_sweep
 from repro.core import verifier
 
@@ -70,6 +71,11 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
         stats_pm = PassManager.from_spec(DEFAULT_PIPELINE_SPEC,
                                          analysis_manager=stats_am)
         stats_pm.run(stats_m)
+        # RTL-pipeline statistics from the same representative flow: the
+        # post-lowering netlist passes report rewrites/wall time exactly like
+        # the HIR-level passes above
+        rtl_pm = PassManager.from_spec(RTL_PIPELINE_SPEC)
+        generate_verilog(stats_m, entry, am=stats_am, rtl_pass_manager=rtl_pm)
 
         def hir_pipeline():
             m = deepcopy(base_module)
@@ -129,6 +135,8 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
             if t_opt_uw > 0 else None,
             # per-pass PassManager statistics (wall seconds + rewrites)
             "per_pass": stats_pm.stats_dict(),
+            # RTL netlist pipeline statistics (same shape as per_pass)
+            "rtl_per_pass": rtl_pm.stats_dict(),
             # shared-analysis cache counters for the verify+optimize flow
             "analysis_cache": stats_am.stats_dict(),
         })
@@ -158,6 +166,12 @@ def main(json_out: bool = False, bench_names=None, reps: int = 3):
         busy = {k: v for k, v in r["per_pass"].items() if v["rewrites"]}
         print(f"  {r['kernel']:12s} " + ", ".join(
             f"{k}: {v['rewrites']}rw/{v['wall_s'] * 1e3:.1f}ms" for k, v in busy.items()))
+    print("\nRTL-pipeline statistics (post-lowering netlist passes):")
+    for r in rows:
+        busy = {k: v for k, v in r["rtl_per_pass"].items() if v["rewrites"]}
+        print(f"  {r['kernel']:12s} " + (", ".join(
+            f"{k}: {v['rewrites']}rw/{v['wall_s'] * 1e3:.1f}ms"
+            for k, v in busy.items()) or "no rewrites"))
     print("\nanalysis cache (shared verify+optimize AnalysisManager):")
     for r in rows:
         ac = r["analysis_cache"]

@@ -3,18 +3,29 @@ HIR-scheduled vs HLS-auto-scheduled, under the documented cost model
 (``core.codegen.resources``).  The paper's Vivado numbers are printed
 alongside for reference (absolute values differ — different synthesis
 stack — the claim reproduced is comparable-or-better resources under one
-consistent flow)."""
+consistent flow).
+
+Each row also reports the **RTL pass pipeline's effect** per kernel:
+``hir_pre_rtl`` is the direct (raw-lowering) emission, ``hir`` the
+post-pipeline emission, ``rtl_delta`` the difference (negative = saved), and
+``rtl_per_pass`` the per-pass rewrite counts.  ``hier`` is the hierarchical
+(non-inlined) emission total, costed with per-instance multiplicity.  The
+row keys are stable for trend tracking; ``--json`` emits them as JSON.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 from copy import deepcopy
 
-from repro.core.codegen.resources import report_module
+from repro.core.codegen.resources import report_design
 from repro.core.codegen.verilog import generate_verilog
 from repro.core.gallery import GALLERY, PAPER_BENCHMARKS
 from repro.core.hls.eraser import erase_schedule
 from repro.core.hls.scheduler import hls_schedule
-from repro.core.passes import DEFAULT_PIPELINE_SPEC, PassManager
+from repro.core.passes import (DEFAULT_PIPELINE_SPEC, RTL_PIPELINE_SPEC,
+                               PassManager)
 
 PAPER = {  # (vivado LUT, FF, DSP, BRAM), (hir LUT, FF, DSP, BRAM)
     "transpose": ((7, 51, 0, 0), (8, 18, 0, 0)),
@@ -26,12 +37,8 @@ PAPER = {  # (vivado LUT, FF, DSP, BRAM), (hir LUT, FF, DSP, BRAM)
 }
 
 
-def _total(mods) -> dict:
-    tot = None
-    for vm in mods.values():
-        r = report_module(vm)
-        tot = r if tot is None else tot + r
-    return tot.as_dict()
+def _total(mods, entry) -> dict:
+    return report_design(mods, entry).as_dict()
 
 
 def run(bench_names=None) -> list[dict]:
@@ -42,33 +49,58 @@ def run(bench_names=None) -> list[dict]:
 
         hir_m = deepcopy(module)
         PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(hir_m)
-        hir_res = _total(generate_verilog(hir_m, entry))
+
+        # direct emission (no RTL pipeline) vs the optimized RTL netlist
+        pre = _total(generate_verilog(deepcopy(hir_m), entry, rtl_spec=None), entry)
+        rtl_pm = PassManager.from_spec(RTL_PIPELINE_SPEC)
+        hir_res = _total(generate_verilog(deepcopy(hir_m), entry,
+                                          rtl_pass_manager=rtl_pm), entry)
+        delta = {k: hir_res[k] - pre[k] for k in pre}
+        # hierarchical (non-inlined) emission of the same design
+        hier = _total(generate_verilog(deepcopy(hir_m), entry,
+                                       hierarchy="modules"), entry)
 
         row = {"kernel": name, "hir": hir_res,
+               "hir_pre_rtl": pre, "rtl_delta": delta, "hier": hier,
+               "rtl_per_pass": {k: v["rewrites"]
+                                for k, v in rtl_pm.stats_dict().items()},
                "paper_vivado": dict(zip(("LUT", "FF", "DSP", "BRAM"), PAPER[name][0])),
                "paper_hir": dict(zip(("LUT", "FF", "DSP", "BRAM"), PAPER[name][1]))}
         if name != "fifo":  # paper compares FIFO against hand Verilog, not HLS
             hls_m = erase_schedule(deepcopy(module))
             hls_schedule(hls_m)
             PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(hls_m)
-            row["hls"] = _total(generate_verilog(hls_m, entry))
+            row["hls"] = _total(generate_verilog(hls_m, entry), entry)
         rows.append(row)
     return rows
 
 
-def main():
-    rows = run()
-    print(f"{'kernel':12s} {'flow':6s} {'LUT':>8s} {'FF':>8s} {'DSP':>6s} {'BRAM':>6s}")
+def main(json_out: bool = False, bench_names=None):
+    rows = run(bench_names)
+    if json_out:
+        print(json.dumps(rows, indent=2))
+        return rows
+    print(f"{'kernel':12s} {'flow':8s} {'LUT':>8s} {'FF':>8s} {'DSP':>6s} {'BRAM':>6s}")
     for r in rows:
-        for flow in ("hir", "hls"):
+        for flow in ("hir_pre_rtl", "hir", "hier", "hls"):
             if flow in r:
                 d = r[flow]
-                print(f"{r['kernel']:12s} {flow:6s} {d['LUT']:8d} {d['FF']:8d} "
+                print(f"{r['kernel']:12s} {flow:8s} {d['LUT']:8d} {d['FF']:8d} "
                       f"{d['DSP']:6d} {d['BRAM']:6d}")
+        dd = r["rtl_delta"]
+        busy = {k: v for k, v in r["rtl_per_pass"].items() if v}
+        print(f"{'':12s} rtl-pipeline delta LUT {dd['LUT']:+d} FF {dd['FF']:+d} "
+              f"({', '.join(f'{k}:{v}' for k, v in busy.items()) or 'no rewrites'})")
         pv, ph = r["paper_vivado"], r["paper_hir"]
         print(f"{'':12s} paper  vivado {pv}  hir {ph}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true", help="emit rows as JSON")
+    ap.add_argument("--kernels", default=None,
+                    help="comma-separated kernel names (default: paper benchmarks)")
+    args = ap.parse_args()
+    names = [s.strip() for s in args.kernels.split(",")] if args.kernels else None
+    main(json_out=args.json, bench_names=names)

@@ -1,2 +1,7 @@
-from .verilog import VerilogModule, generate_verilog  # noqa: F401
-from .resources import ResourceReport, estimate_resources  # noqa: F401
+from .rtl import (RTL_PIPELINE_SPEC, RTLDesign, RTLModule, print_design,  # noqa: F401
+                  print_rtl)
+from .verilog import (Netlist, VerilogModule, generate_verilog,  # noqa: F401
+                      lower_to_rtl, netlist_of)
+from .resources import (ResourceReport, estimate_resources,  # noqa: F401
+                        report_design, report_module)
+from .lint import lint_verilog  # noqa: F401

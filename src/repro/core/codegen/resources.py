@@ -1,8 +1,8 @@
-"""FPGA resource model (paper Table 5 analogue).
+"""FPGA resource model (paper Table 5 analogue) over the structured netlist.
 
 We cannot run Vivado in this environment, so resource usage is estimated from
-the generated netlist structure with a documented cost model for Xilinx
-7-series (the paper's VC709 = Virtex-7):
+the *post-RTL-pipeline* netlist structure with a documented cost model for
+Xilinx 7-series (the paper's VC709 = Virtex-7):
 
   LUTs  — one 6-input LUT per output bit of combinational logic (adders,
           comparators, muxes, bitwise ops); LUTRAM at 1 LUT per 2 bits per
@@ -17,6 +17,14 @@ the generated netlist structure with a documented cost model for Xilinx
   BRAM  — RAMB18 blocks: ceil(bits/18Kb) per bank, dual-port within one
           block is free (so port demotion saves LUTs, not BRAMs).
 
+The summary (``Netlist``) is **derived from the RTL IR** by
+``verilog.netlist_of`` after the RTL pass pipeline ran, so dead, merged and
+shared hardware is counted exactly once.  Hierarchical designs are costed by
+``report_design``: every module *definition* is estimated once (memoized)
+and then weighted by its instantiation multiplicity — 256 instances of one
+``mac`` module cost 256x the mac estimate, without re-deriving it per
+instance.
+
 The model's purpose is *relative* comparison between HIR-scheduled and
 HLS-baseline-scheduled designs under one consistent cost function, mirroring
 how the paper compares HIR vs Vivado HLS under one synthesis flow.
@@ -26,6 +34,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Mapping, Optional
 
 from .verilog import Netlist, VerilogModule
 
@@ -39,6 +48,9 @@ class ResourceReport:
 
     def __add__(self, o: "ResourceReport") -> "ResourceReport":
         return ResourceReport(self.lut + o.lut, self.ff + o.ff, self.dsp + o.dsp, self.bram + o.bram)
+
+    def scaled(self, k: int) -> "ResourceReport":
+        return ResourceReport(self.lut * k, self.ff * k, self.dsp * k, self.bram * k)
 
     def as_dict(self) -> dict:
         return {"LUT": self.lut, "FF": self.ff, "DSP": self.dsp, "BRAM": self.bram}
@@ -55,6 +67,8 @@ def _dsp_for_mult(width: int) -> int:
 
 
 def estimate_resources(nl: Netlist) -> ResourceReport:
+    """Flat (single-module) estimate; instances are *not* included — use
+    ``report_design`` for hierarchy-aware totals."""
     r = ResourceReport()
 
     for w in nl.adders:
@@ -104,3 +118,34 @@ def estimate_resources(nl: Netlist) -> ResourceReport:
 
 def report_module(vm: VerilogModule) -> ResourceReport:
     return estimate_resources(vm.netlist)
+
+
+def report_design(mods: Mapping[str, VerilogModule],
+                  entry: Optional[str] = None) -> ResourceReport:
+    """Hierarchy-aware estimate rooted at ``entry`` (default: every module
+    that is not instantiated by another — the top level(s)).  Each module
+    definition is estimated once and cached; instantiation multiplicity then
+    weights the shared estimate, so a module instantiated 256 times is
+    derived once and counted 256 times."""
+    memo: dict[str, ResourceReport] = {}
+
+    def cost(name: str, stack: tuple = ()) -> ResourceReport:
+        if name in memo:
+            return memo[name]
+        vm = mods.get(name)
+        if vm is None or name in stack:  # external/blackbox or cycle guard
+            return ResourceReport()
+        r = estimate_resources(vm.netlist)
+        for sub in vm.netlist.instances:
+            r = r + cost(sub, stack + (name,))
+        memo[name] = r
+        return r
+
+    if entry is not None:
+        return cost(entry)
+    instantiated = {sub for vm in mods.values() for sub in vm.netlist.instances}
+    roots = [n for n in mods if n not in instantiated] or list(mods)
+    total = ResourceReport()
+    for n in roots:
+        total = total + cost(n)
+    return total

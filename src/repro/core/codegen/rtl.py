@@ -1,0 +1,1181 @@
+"""Structured RTL netlist IR — the layer between scheduled HIR and Verilog.
+
+Scheduled HIR is lowered (``core.codegen.verilog``) into an ``RTLModule`` per
+``hir.func``: typed nets, combinational assigns, shift registers, clocked
+register writes, loop-controller FSMs, memory primitives (reg / lutram / bram
+banks) and **module instances**.  Verilog text is then a thin printer over
+this IR (``print_rtl``), and the resource model reads the same structure —
+nothing below the HIR level is a string anymore.
+
+The module also hosts the RTL pass pipeline, registered on the same
+``core.passmgr`` infrastructure as the HIR-level passes:
+
+  * ``net-fanout``     (analysis)  — per-net reader/writer item indices;
+  * ``rtl-dce``        — dead-net elimination: removes items (and their
+                         declared nets) that cannot reach an output port,
+                         a memory with a live reader, an instance input or
+                         an assertion;
+  * ``rtl-merge-srl``  — shift-register merging: equal-source chains are
+                         shared; a deeper chain re-taps the tail of a
+                         shallower equal-source chain instead of keeping a
+                         full-depth private copy;
+  * ``rtl-share-comb`` — duplicate-comb-expression sharing: structurally
+                         identical combinational assigns collapse onto one
+                         driver net.
+
+``RTL_PIPELINE_SPEC`` is the default post-lowering pipeline;
+``PassManager.from_spec(RTL_PIPELINE_SPEC)`` runs it over an ``RTLDesign``
+(the pass classes accept either an ``RTLDesign`` or a plain dict of
+``RTLModule``), with per-pass rewrite/wall statistics flowing into
+``benchmarks/codegen_speed.py`` exactly like the HIR-level passes.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Iterator, Optional, Union
+
+from ..ir import Loc, UNKNOWN_LOC
+from ..passmgr import (AnalysisManager, FunctionAnalysis, Pass,
+                       register_analysis, register_pass)
+
+# ---------------------------------------------------------------------------
+# Expressions
+# ---------------------------------------------------------------------------
+
+
+class Expr:
+    """Base class of RTL expressions.  Expressions are immutable trees over
+    net *names* (``Ref``) and literals; ``refs()`` yields referenced nets and
+    ``key()`` is a structural identity used by CSE-style sharing."""
+
+    __slots__ = ()
+
+    def refs(self) -> Iterator[str]:
+        return iter(())
+
+    def key(self) -> tuple:
+        raise NotImplementedError
+
+    def map_refs(self, ren: dict[str, str]) -> "Expr":
+        """A copy with net names substituted per ``ren`` (identity if no
+        referenced name is renamed)."""
+        return self
+
+
+class Const(Expr):
+    """A literal: ``32'd5`` when sized, a bare integer when not."""
+
+    __slots__ = ("value", "width", "signed")
+
+    def __init__(self, value: Union[int, float], width: Optional[int] = None,
+                 signed: bool = False):
+        self.value = value
+        self.width = width
+        self.signed = signed
+
+    def key(self) -> tuple:
+        return ("c", self.value, self.width, self.signed)
+
+    def __str__(self) -> str:
+        if self.width is None or not isinstance(self.value, int):
+            return str(self.value)
+        if self.signed and self.value < 0:
+            return f"-{self.width}'sd{-self.value}"
+        if self.value < 0:
+            return f"-{self.width}'d{-self.value}"
+        return f"{self.width}'d{self.value}"
+
+
+class Ref(Expr):
+    """A reference to a net or port by name."""
+
+    __slots__ = ("name",)
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def refs(self) -> Iterator[str]:
+        yield self.name
+
+    def key(self) -> tuple:
+        return ("r", self.name)
+
+    def map_refs(self, ren: dict[str, str]) -> "Expr":
+        return Ref(ren[self.name]) if self.name in ren else self
+
+    def __str__(self) -> str:
+        return self.name
+
+
+class Signed(Expr):
+    """``$signed(a)`` — arithmetic reinterpretation, zero hardware."""
+
+    __slots__ = ("a",)
+
+    def __init__(self, a: Expr):
+        self.a = a
+
+    def refs(self) -> Iterator[str]:
+        return self.a.refs()
+
+    def key(self) -> tuple:
+        return ("s", self.a.key())
+
+    def map_refs(self, ren: dict[str, str]) -> "Expr":
+        a = self.a.map_refs(ren)
+        return self if a is self.a else Signed(a)
+
+    def __str__(self) -> str:
+        return f"$signed({self.a})"
+
+
+class Unop(Expr):
+    __slots__ = ("op", "a", "width")
+
+    def __init__(self, op: str, a: Expr, width: int = 1):
+        self.op = op
+        self.a = a
+        self.width = width  # cost width (resource model)
+
+    def refs(self) -> Iterator[str]:
+        return self.a.refs()
+
+    def key(self) -> tuple:
+        return ("u", self.op, self.a.key())
+
+    def map_refs(self, ren: dict[str, str]) -> "Expr":
+        a = self.a.map_refs(ren)
+        return self if a is self.a else Unop(self.op, a, self.width)
+
+    def __str__(self) -> str:
+        return f"{self.op}({self.a})"
+
+
+class Binop(Expr):
+    """A binary operator.  ``width`` is the cost width for the resource
+    model; ``impl`` carries the HIR binding for multiplies (``dsp`` /
+    ``shift_add`` / ``counter`` / ``div``); ``free=True`` marks wiring-only
+    nodes (constant-stride address scaling, shifts by constants) that consume
+    no logic."""
+
+    __slots__ = ("op", "a", "b", "width", "impl", "free")
+
+    def __init__(self, op: str, a: Expr, b: Expr, width: int = 32,
+                 impl: str = "", free: bool = False):
+        self.op = op
+        self.a = a
+        self.b = b
+        self.width = width
+        self.impl = impl
+        self.free = free
+
+    def refs(self) -> Iterator[str]:
+        yield from self.a.refs()
+        yield from self.b.refs()
+
+    def key(self) -> tuple:
+        return ("b", self.op, self.a.key(), self.b.key())
+
+    def map_refs(self, ren: dict[str, str]) -> "Expr":
+        a, b = self.a.map_refs(ren), self.b.map_refs(ren)
+        if a is self.a and b is self.b:
+            return self
+        return Binop(self.op, a, b, self.width, self.impl, self.free)
+
+    def __str__(self) -> str:
+        return f"({self.a} {self.op} {self.b})"
+
+
+class Mux(Expr):
+    """``cond ? a : b`` (one 2:1 mux of ``width`` bits)."""
+
+    __slots__ = ("cond", "a", "b", "width")
+
+    def __init__(self, cond: Expr, a: Expr, b: Expr, width: int = 1):
+        self.cond = cond
+        self.a = a
+        self.b = b
+        self.width = width
+
+    def refs(self) -> Iterator[str]:
+        yield from self.cond.refs()
+        yield from self.a.refs()
+        yield from self.b.refs()
+
+    def key(self) -> tuple:
+        return ("m", self.cond.key(), self.a.key(), self.b.key())
+
+    def map_refs(self, ren: dict[str, str]) -> "Expr":
+        c, a, b = (self.cond.map_refs(ren), self.a.map_refs(ren),
+                   self.b.map_refs(ren))
+        if c is self.cond and a is self.a and b is self.b:
+            return self
+        return Mux(c, a, b, self.width)
+
+    def __str__(self) -> str:
+        return f"(({self.cond}) ? ({self.a}) : ({self.b}))"
+
+
+class Repeat(Expr):
+    """``{n{a}}`` — replication (wiring only)."""
+
+    __slots__ = ("n", "a")
+
+    def __init__(self, n: int, a: Expr):
+        self.n = n
+        self.a = a
+
+    def refs(self) -> Iterator[str]:
+        return self.a.refs()
+
+    def key(self) -> tuple:
+        return ("rep", self.n, self.a.key())
+
+    def map_refs(self, ren: dict[str, str]) -> "Expr":
+        a = self.a.map_refs(ren)
+        return self if a is self.a else Repeat(self.n, a)
+
+    def __str__(self) -> str:
+        return f"{{{self.n}{{{self.a}}}}}"
+
+
+def zeros(width: int) -> Expr:
+    return Repeat(width, Const(0, 1)) if width > 1 else Const(0, 1)
+
+
+def walk_expr(e: Expr) -> Iterator[Expr]:
+    yield e
+    for attr in ("a", "b", "cond"):
+        sub = getattr(e, attr, None)
+        if isinstance(sub, Expr):
+            yield from walk_expr(sub)
+
+
+# ---------------------------------------------------------------------------
+# Nets and items
+# ---------------------------------------------------------------------------
+
+WIRE = "wire"
+REG = "reg"
+
+
+@dataclass
+class Net:
+    """A declared identifier: a wire (driven by one ``CombAssign``) or a reg
+    (written by clocked items).  ``origin`` tags special roles for the
+    resource model (``"regbank"`` cells) without subclassing."""
+
+    name: str
+    width: int
+    kind: str = WIRE  # WIRE | REG
+    signed: bool = False
+    origin: str = ""
+    comment: str = ""
+
+
+@dataclass
+class Port:
+    name: str
+    dir: str  # "input" | "output"
+    width: int
+
+
+class Item:
+    """Base class of RTL statements.  ``reads()``/``writes()`` are the net
+    names this item consumes/drives — the hooks every RTL pass is built on."""
+
+    loc: Loc = UNKNOWN_LOC
+
+    def reads(self) -> Iterator[str]:
+        return iter(())
+
+    def writes(self) -> Iterator[str]:
+        return iter(())
+
+    def exprs(self) -> Iterator[Expr]:
+        return iter(())
+
+    def map_refs(self, ren: dict[str, str]) -> None:
+        """Rename read references in place (dest names are never renamed)."""
+
+
+class CombAssign(Item):
+    """``assign dest = expr;`` (dest is a wire or an output port)."""
+
+    __slots__ = ("dest", "expr", "loc")
+
+    def __init__(self, dest: str, expr: Expr, loc: Loc = UNKNOWN_LOC):
+        self.dest = dest
+        self.expr = expr
+        self.loc = loc
+
+    def reads(self) -> Iterator[str]:
+        return self.expr.refs()
+
+    def writes(self) -> Iterator[str]:
+        yield self.dest
+
+    def exprs(self) -> Iterator[Expr]:
+        yield self.expr
+
+    def map_refs(self, ren: dict[str, str]) -> None:
+        self.expr = self.expr.map_refs(ren)
+
+
+class ShiftReg(Item):
+    """``dest`` = ``src`` delayed by ``depth`` cycles (depth >= 1).  Prints
+    as an SRL-style chain; ``reset_zero`` chains (pulse networks) clear on
+    ``rst``."""
+
+    __slots__ = ("dest", "src", "width", "depth", "reset_zero", "loc")
+
+    def __init__(self, dest: str, src: Expr, width: int, depth: int,
+                 reset_zero: bool = False, loc: Loc = UNKNOWN_LOC):
+        assert depth >= 1, depth
+        self.dest = dest
+        self.src = src
+        self.width = width
+        self.depth = depth
+        self.reset_zero = reset_zero
+        self.loc = loc
+
+    def reads(self) -> Iterator[str]:
+        return self.src.refs()
+
+    def writes(self) -> Iterator[str]:
+        yield self.dest
+
+    def exprs(self) -> Iterator[Expr]:
+        yield self.src
+
+    def map_refs(self, ren: dict[str, str]) -> None:
+        self.src = self.src.map_refs(ren)
+
+
+class RegAssign(Item):
+    """``always @(posedge clk) if (en) dest <= src;`` — one clocked register
+    write (en=None writes every cycle)."""
+
+    __slots__ = ("dest", "src", "en", "loc")
+
+    def __init__(self, dest: str, src: Expr, en: Optional[Expr] = None,
+                 loc: Loc = UNKNOWN_LOC):
+        self.dest = dest
+        self.src = src
+        self.en = en
+        self.loc = loc
+
+    def reads(self) -> Iterator[str]:
+        yield from self.src.refs()
+        if self.en is not None:
+            yield from self.en.refs()
+
+    def writes(self) -> Iterator[str]:
+        yield self.dest
+
+    def exprs(self) -> Iterator[Expr]:
+        yield self.src
+        if self.en is not None:
+            yield self.en
+
+    def map_refs(self, ren: dict[str, str]) -> None:
+        self.src = self.src.map_refs(ren)
+        if self.en is not None:
+            self.en = self.en.map_refs(ren)
+
+
+class Memory(Item):
+    """A banked on-chip memory (lutram / bram).  Declares
+    ``{name}_ram{bk}[0:depth-1]`` per bank; accessed by MemRead/MemWrite."""
+
+    __slots__ = ("name", "banks", "depth", "width", "kind", "ports", "loc")
+
+    def __init__(self, name: str, banks: int, depth: int, width: int,
+                 kind: str, ports: int = 2, loc: Loc = UNKNOWN_LOC):
+        self.name = name
+        self.banks = banks
+        self.depth = depth
+        self.width = width
+        self.kind = kind  # "lutram" | "bram"
+        self.ports = ports
+        self.loc = loc
+
+
+class MemRead(Item):
+    """Synchronous read: ``if (en) dest <= mem_ram{bank}[addr];``."""
+
+    __slots__ = ("dest", "mem", "bank", "addr", "en", "loc")
+
+    def __init__(self, dest: str, mem: str, bank: int, addr: Expr, en: Expr,
+                 loc: Loc = UNKNOWN_LOC):
+        self.dest = dest
+        self.mem = mem
+        self.bank = bank
+        self.addr = addr
+        self.en = en
+        self.loc = loc
+
+    def reads(self) -> Iterator[str]:
+        yield from self.addr.refs()
+        yield from self.en.refs()
+
+    def writes(self) -> Iterator[str]:
+        yield self.dest
+
+    def exprs(self) -> Iterator[Expr]:
+        yield self.addr
+        yield self.en
+
+    def map_refs(self, ren: dict[str, str]) -> None:
+        self.addr = self.addr.map_refs(ren)
+        self.en = self.en.map_refs(ren)
+
+
+class MemWrite(Item):
+    """Synchronous write: ``if (en) mem_ram{bank}[addr] <= data;``."""
+
+    __slots__ = ("mem", "bank", "addr", "data", "en", "loc")
+
+    def __init__(self, mem: str, bank: int, addr: Expr, data: Expr, en: Expr,
+                 loc: Loc = UNKNOWN_LOC):
+        self.mem = mem
+        self.bank = bank
+        self.addr = addr
+        self.data = data
+        self.en = en
+        self.loc = loc
+
+    def reads(self) -> Iterator[str]:
+        yield from self.addr.refs()
+        yield from self.data.refs()
+        yield from self.en.refs()
+
+    def exprs(self) -> Iterator[Expr]:
+        yield self.addr
+        yield self.data
+        yield self.en
+
+    def map_refs(self, ren: dict[str, str]) -> None:
+        self.addr = self.addr.map_refs(ren)
+        self.data = self.data.map_refs(ren)
+        self.en = self.en.map_refs(ren)
+
+
+class LoopController(Item):
+    """The counter-based FSM of one ``hir.for``: drives the induction
+    variable ``iv``, the per-iteration pulse ``iter``, the completion pulse
+    ``endp`` and the ``active`` flag.  ``ii`` is the constant initiation
+    interval; ``inner_end`` (sequential loops) launches the next iteration
+    from an inner completion pulse instead."""
+
+    __slots__ = ("prefix", "iv", "ivw", "active", "iter_net", "endp",
+                 "iicnt", "start", "lb", "ub", "step", "ii", "inner_end",
+                 "loc")
+
+    def __init__(self, prefix: str, iv: str, ivw: int, active: str,
+                 iter_net: str, endp: str, start: Expr, lb: Expr, ub: Expr,
+                 step: Expr, ii: Optional[int] = None,
+                 inner_end: Optional[Expr] = None, iicnt: str = "",
+                 loc: Loc = UNKNOWN_LOC):
+        assert (ii is None) != (inner_end is None), "constant II xor sequential"
+        self.prefix = prefix
+        self.iv = iv
+        self.ivw = ivw
+        self.active = active
+        self.iter_net = iter_net
+        self.endp = endp
+        self.iicnt = iicnt
+        self.start = start
+        self.lb = lb
+        self.ub = ub
+        self.step = step
+        self.ii = ii
+        self.inner_end = inner_end
+        self.loc = loc
+
+    def reads(self) -> Iterator[str]:
+        for e in self.exprs():
+            yield from e.refs()
+
+    def writes(self) -> Iterator[str]:
+        yield self.iv
+        yield self.active
+        yield self.iter_net
+        if self.endp:  # pruned to "" by rtl-dce when the pulse is unread
+            yield self.endp
+        if self.iicnt:
+            yield self.iicnt
+
+    def exprs(self) -> Iterator[Expr]:
+        yield self.start
+        yield self.lb
+        yield self.ub
+        yield self.step
+        if self.inner_end is not None:
+            yield self.inner_end
+
+    def map_refs(self, ren: dict[str, str]) -> None:
+        self.start = self.start.map_refs(ren)
+        self.lb = self.lb.map_refs(ren)
+        self.ub = self.ub.map_refs(ren)
+        self.step = self.step.map_refs(ren)
+        if self.inner_end is not None:
+            self.inner_end = self.inner_end.map_refs(ren)
+
+
+class Instance(Item):
+    """A module instantiation.  ``conns`` is an ordered list of
+    ``(port_name, expr, is_output)``: inputs take arbitrary expressions,
+    outputs must be ``Ref`` to a net this instance drives."""
+
+    __slots__ = ("module", "inst", "conns", "loc")
+
+    def __init__(self, module: str, inst: str,
+                 conns: list[tuple[str, Expr, bool]], loc: Loc = UNKNOWN_LOC):
+        self.module = module
+        self.inst = inst
+        self.conns = list(conns)
+        self.loc = loc
+
+    def reads(self) -> Iterator[str]:
+        for _p, e, is_out in self.conns:
+            if not is_out:
+                yield from e.refs()
+
+    def writes(self) -> Iterator[str]:
+        for _p, e, is_out in self.conns:
+            if is_out:
+                assert isinstance(e, Ref), (self.inst, _p)
+                yield e.name
+
+    def exprs(self) -> Iterator[Expr]:
+        for _p, e, _o in self.conns:
+            yield e
+
+    def map_refs(self, ren: dict[str, str]) -> None:
+        self.conns = [(p, e if is_out else e.map_refs(ren), is_out)
+                      for p, e, is_out in self.conns]
+
+
+class PortConflictAssert(Item):
+    """The §4.5 UB guard: simulation-only ``$error`` when two enables of one
+    bus fire in the same cycle."""
+
+    __slots__ = ("bus", "ens", "loc")
+
+    def __init__(self, bus: str, ens: list[Expr], loc: Loc = UNKNOWN_LOC):
+        self.bus = bus
+        self.ens = list(ens)
+        self.loc = loc
+
+    def reads(self) -> Iterator[str]:
+        for e in self.ens:
+            yield from e.refs()
+
+    def exprs(self) -> Iterator[Expr]:
+        return iter(self.ens)
+
+    def map_refs(self, ren: dict[str, str]) -> None:
+        self.ens = [e.map_refs(ren) for e in self.ens]
+
+
+# ---------------------------------------------------------------------------
+# Modules and designs
+# ---------------------------------------------------------------------------
+
+
+class RTLModule:
+    """One hardware module: ports, net declarations and an ordered item
+    list.  ``arg_ports``/``result_ports`` record the interface-port names of
+    the originating ``hir.func``'s arguments/results, so callers can build
+    ``Instance`` connections without re-deriving naming."""
+
+    def __init__(self, name: str, loc: Loc = UNKNOWN_LOC):
+        self.name = name
+        self.loc = loc
+        self.ports: list[Port] = []
+        self.nets: dict[str, Net] = {}
+        self.items: list[Item] = []
+        # hir.func interface map, filled by the lowering: per argument index,
+        # the interface ports as (port_name, dir, role, bank) tuples — role in
+        # {"scalar", "rd_addr", "rd_en", "rd_data", "wr_addr", "wr_en",
+        # "wr_data"}, bank -1 for non-banked ports.  Callers build Instance
+        # connections from this instead of re-deriving the naming scheme.
+        self.arg_ports: dict[int, list[tuple[str, str, str, int]]] = {}
+        self.result_ports: list[tuple[str, str]] = []  # (data, valid)
+        self.source_func: str = name
+
+    # -- construction ------------------------------------------------------
+    def add_port(self, name: str, dir: str, width: int = 1) -> str:
+        assert not any(p.name == name for p in self.ports), name
+        self.ports.append(Port(name, dir, width))
+        return name
+
+    def new_net(self, name: str, width: int, kind: str = WIRE,
+                signed: bool = False, origin: str = "",
+                comment: str = "") -> str:
+        assert name not in self.nets, name
+        self.nets[name] = Net(name, width, kind, signed, origin, comment)
+        return name
+
+    def add(self, item: Item) -> Item:
+        self.items.append(item)
+        return item
+
+    # -- queries -----------------------------------------------------------
+    def port_names(self) -> set[str]:
+        return {p.name for p in self.ports}
+
+    def output_ports(self) -> set[str]:
+        return {p.name for p in self.ports if p.dir == "output"}
+
+    def memories(self) -> dict[str, Memory]:
+        return {it.name: it for it in self.items if isinstance(it, Memory)}
+
+    def instances(self) -> list[Instance]:
+        return [it for it in self.items if isinstance(it, Instance)]
+
+    # -- mutation helpers used by the passes ---------------------------------
+    def replace_net(self, old: str, new: str) -> int:
+        """Rewrite every *read* reference to ``old`` into ``new``; the net
+        declaration and its drivers are untouched.  Returns #items touched."""
+        ren = {old: new}
+        n = 0
+        for it in self.items:
+            before = list(it.reads())
+            if old in before:
+                it.map_refs(ren)
+                n += 1
+        return n
+
+    def drop_items(self, dead: set[int]) -> None:
+        self.items = [it for i, it in enumerate(self.items) if i not in dead]
+
+    def prune_nets(self) -> int:
+        """Drop net declarations that no remaining item reads or writes and
+        that are not ports.  Returns the number removed."""
+        used: set[str] = set()
+        for it in self.items:
+            used.update(it.reads())
+            used.update(it.writes())
+        used.update(self.port_names())
+        dead = [n for n in self.nets if n not in used]
+        for n in dead:
+            del self.nets[n]
+        return len(dead)
+
+
+class RTLDesign:
+    """A set of RTL modules with a designated entry — what the RTL pass
+    pipeline runs on (duck-typing the PassManager's ``Module``)."""
+
+    def __init__(self, modules: Optional[dict[str, RTLModule]] = None,
+                 entry: Optional[str] = None):
+        self.modules: dict[str, RTLModule] = modules or {}
+        self.entry = entry
+
+    def add(self, m: RTLModule) -> RTLModule:
+        self.modules[m.name] = m
+        return m
+
+    def __iter__(self) -> Iterator[RTLModule]:
+        return iter(self.modules.values())
+
+    def instance_counts(self) -> dict[str, int]:
+        """Total instantiation multiplicity per module name, entry-rooted
+        (an instance inside a module instantiated k times counts k)."""
+        counts: dict[str, int] = {}
+        roots = [self.entry] if self.entry in self.modules else list(self.modules)
+
+        def visit(name: str, mult: int, stack: tuple) -> None:
+            if name in stack or name not in self.modules:
+                return
+            for inst in self.modules[name].instances():
+                counts[inst.module] = counts.get(inst.module, 0) + mult
+                visit(inst.module, mult, stack + (name,))
+
+        for r in roots:
+            visit(r, 1, ())
+        return counts
+
+
+# ---------------------------------------------------------------------------
+# Verilog printer (the thin layer the old string emitter became)
+# ---------------------------------------------------------------------------
+
+
+def _decl(net: Net) -> str:
+    sgn = " signed" if net.signed else ""
+    rng = f" [{net.width - 1}:0]" if net.width > 1 else ""
+    c = f" // {net.comment}" if net.comment else ""
+    return f"{net.kind}{sgn}{rng} {net.name};{c}"
+
+
+def _print_item(it: Item, out: list[str], decls: list[str]) -> None:
+    loc = f" // {it.loc}" if it.loc is not UNKNOWN_LOC else ""
+    if isinstance(it, CombAssign):
+        out.append(f"assign {it.dest} = {it.expr};{loc}")
+    elif isinstance(it, ShiftReg):
+        nm, d, w = it.dest, it.depth, it.width
+        rst = "rst ? " if it.reset_zero else ""
+        if d == 1:
+            decls.append(f"reg [{w - 1}:0] {nm}_q;" if w > 1 else f"reg {nm}_q;")
+            z = zeros(w)
+            src = f"{z} : {it.src}" if it.reset_zero else f"{it.src}"
+            out.append(f"always @(posedge clk) {nm}_q <= {rst}{src};{loc}")
+            out.append(f"assign {nm} = {nm}_q;")
+            return
+        decls.append(f"reg [{w - 1}:0] {nm}_sr [0:{d - 1}];")
+        out.append(f"always @(posedge clk) begin{loc}")
+        if it.reset_zero:
+            out.append(f"  {nm}_sr[0] <= rst ? {zeros(w)} : {it.src};")
+        else:
+            out.append(f"  {nm}_sr[0] <= {it.src};")
+        for s in range(1, d):
+            if it.reset_zero:
+                out.append(f"  {nm}_sr[{s}] <= rst ? {zeros(w)} : {nm}_sr[{s - 1}];")
+            else:
+                out.append(f"  {nm}_sr[{s}] <= {nm}_sr[{s - 1}];")
+        out.append("end")
+        out.append(f"assign {nm} = {nm}_sr[{d - 1}];")
+    elif isinstance(it, RegAssign):
+        guard = f"if ({it.en}) " if it.en is not None else ""
+        out.append(f"always @(posedge clk) {guard}{it.dest} <= {it.src};{loc}")
+    elif isinstance(it, Memory):
+        style = "block" if it.kind == "bram" else "distributed"
+        for bk in range(it.banks):
+            decls.append(
+                f'(* ram_style = "{style}" *) reg [{it.width - 1}:0] '
+                f"{it.name}_ram{bk} [0:{max(it.depth - 1, 1)}];"
+            )
+    elif isinstance(it, MemRead):
+        out.append(
+            f"always @(posedge clk) if ({it.en}) "
+            f"{it.dest} <= {it.mem}_ram{it.bank}[{it.addr}];{loc}"
+        )
+    elif isinstance(it, MemWrite):
+        out.append(
+            f"always @(posedge clk) if ({it.en}) "
+            f"{it.mem}_ram{it.bank}[{it.addr}] <= {it.data};{loc}"
+        )
+    elif isinstance(it, LoopController):
+        _print_controller(it, out)
+    elif isinstance(it, Instance):
+        conns = ", ".join(f".{p}({e})" for p, e, _o in it.conns)
+        out.append(f"{it.module} {it.inst} ({conns});{loc}")
+    elif isinstance(it, PortConflictAssert):
+        out.append("`ifndef SYNTHESIS")
+        cond = " + ".join(f"(({e}) ? 1 : 0)" for e in it.ens)
+        out.append(
+            f"always @(posedge clk) if (({cond}) > 1) "
+            f'$error("port conflict on {it.bus} (UB 4.5)");'
+        )
+        out.append("`endif")
+    else:  # pragma: no cover - future item kinds
+        raise NotImplementedError(type(it).__name__)
+
+
+def _print_controller(it: LoopController, out: list[str]) -> None:
+    iv, act, itr, endp = it.iv, it.active, it.iter_net, it.endp
+    step_up = f"{iv} + {it.step}"
+    more = f"({step_up} < {it.ub})"
+    if it.ii is not None:
+        ii = it.ii
+        cond_next = f"{it.iicnt} == {ii - 1}" if ii > 1 else "1'b1"
+        out.append(f"// controller: hir.for %{iv} II={ii} {it.loc}")
+        out.append(
+            f"assign {itr} = {it.start} | ({act} && ({cond_next}) && {more});")
+        out.append("always @(posedge clk) begin")
+        if ii > 1:
+            out.append(f"  if (rst) begin {act} <= 0; {it.iicnt} <= 0; end")
+        else:
+            out.append(f"  if (rst) {act} <= 0;")
+        out.append(f"  else if ({it.start}) begin")
+        init_cnt = f" {it.iicnt} <= 0;" if ii > 1 else ""
+        out.append(f"    {act} <= 1; {iv} <= {it.lb};{init_cnt}")
+        out.append(f"  end else if ({act}) begin")
+        if ii > 1:
+            out.append(f"    {it.iicnt} <= ({cond_next}) ? 0 : {it.iicnt} + 1;")
+        out.append(f"    if ({cond_next}) begin")
+        out.append(f"      if ({more}) {iv} <= {step_up};")
+        out.append(f"      else {act} <= 0;")
+        out.append("    end")
+        out.append("  end")
+        out.append("end")
+        if endp:
+            out.append(
+                f"always @(posedge clk) {endp} <= "
+                f"{act} && ({cond_next}) && ({step_up} >= {it.ub});")
+    else:
+        inner = it.inner_end
+        out.append(f"// controller: sequential hir.for %{iv} {it.loc}")
+        out.append(f"assign {itr} = {it.start} | (({inner}) && {act} && {more});")
+        out.append("always @(posedge clk) begin")
+        out.append(f"  if (rst) {act} <= 0;")
+        out.append(f"  else if ({it.start}) begin {act} <= 1; {iv} <= {it.lb}; end")
+        out.append(f"  else if (({inner}) && {act}) begin")
+        out.append(f"    if ({more}) {iv} <= {step_up};")
+        out.append(f"    else {act} <= 0;")
+        out.append("  end")
+        out.append("end")
+        if endp:
+            out.append(
+                f"always @(posedge clk) {endp} <= ({inner}) && {act} && "
+                f"({step_up} >= {it.ub});")
+
+
+def print_rtl(m: RTLModule) -> str:
+    """Print one RTLModule as synthesizable Verilog."""
+    hdr = f"// generated by repro.core.codegen from @{m.source_func} ({m.loc})\n"
+    ports = ",\n    ".join(
+        f"{p.dir} wire{f' [{p.width - 1}:0]' if p.width > 1 else ''} {p.name}"
+        for p in m.ports)
+    hdr += f"module {m.name} (\n    {ports}\n);\n"
+    decls = [_decl(n) for n in m.nets.values()]
+    lines: list[str] = []
+    for it in m.items:
+        _print_item(it, lines, decls)
+    body = "\n".join("  " + l for l in decls + [""] + lines)
+    return hdr + body + "\nendmodule\n"
+
+
+def print_design(d: RTLDesign) -> str:
+    return "\n".join(print_rtl(m) for m in d)
+
+
+# ---------------------------------------------------------------------------
+# Net fan-out analysis (on the shared AnalysisManager)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class NetFanout:
+    """Reader/writer item indices per net of one RTLModule."""
+
+    readers: dict[str, list[int]] = field(default_factory=dict)
+    writers: dict[str, list[int]] = field(default_factory=dict)
+
+    def fanout(self, net: str) -> int:
+        return len(self.readers.get(net, ()))
+
+
+@register_analysis
+class NetFanoutAnalysis(FunctionAnalysis):
+    """Per-module net fan-out — keyed on the RTLModule through the same
+    AnalysisManager cache the HIR analyses use (the manager only relies on
+    object identity, so RTL modules slot in beside FuncOps)."""
+
+    name = "net-fanout"
+
+    @staticmethod
+    def run(func: Any, am: AnalysisManager) -> NetFanout:
+        m: RTLModule = func
+        fo = NetFanout()
+        for i, it in enumerate(m.items):
+            for r in it.reads():
+                fo.readers.setdefault(r, []).append(i)
+            for w in it.writes():
+                fo.writers.setdefault(w, []).append(i)
+        return fo
+
+
+# ---------------------------------------------------------------------------
+# RTL passes
+# ---------------------------------------------------------------------------
+
+
+class RTLPass(Pass):
+    """Base of passes running over an ``RTLDesign`` (or a plain dict of
+    RTLModules).  Subclasses implement ``run_module``."""
+
+    def run(self, design) -> int:
+        mods = design.modules if isinstance(design, RTLDesign) else dict(design)
+        n = 0
+        for m in mods.values():
+            n += self.run_module(m)
+        return n
+
+    def run_module(self, m: RTLModule) -> int:
+        raise NotImplementedError
+
+
+@register_pass
+class DeadNetElim(RTLPass):
+    """Dead-net elimination.  Liveness roots: output ports, instances (their
+    inputs feed other modules) and UB assertions.  Memory writes are live
+    only while some live item reads the memory; everything else must
+    transitively feed a root to survive."""
+
+    name = "rtl-dce"
+
+    def run_module(self, m: RTLModule) -> int:
+        n_pruned = self._prune_controller_outputs(m)
+        if n_pruned and self.am is not None:
+            self.am.invalidate(func=m)
+        fo = self.get_analysis(NetFanoutAnalysis, m)
+        items = m.items
+        needed: set[str] = set(m.output_ports())
+        live: set[int] = set()
+        live_mems: set[str] = set()
+
+        def mark(i: int) -> None:
+            if i in live:
+                return
+            live.add(i)
+            it = items[i]
+            for r in it.reads():
+                if r not in needed:
+                    needed.add(r)
+                    for w in fo.writers.get(r, ()):  # drivers become relevant
+                        pending.append(w)
+            if isinstance(it, MemRead):
+                live_mems.add(it.mem)
+
+        pending: list[int] = []
+        for i, it in enumerate(items):
+            if isinstance(it, (Instance, PortConflictAssert)):
+                pending.append(i)
+            elif any(w in needed for w in it.writes()):
+                pending.append(i)
+        while True:
+            while pending:
+                i = pending.pop()
+                if i in live:
+                    continue
+                it = items[i]
+                if isinstance(it, MemWrite) and it.mem not in live_mems:
+                    continue  # revisited below if the memory becomes live
+                mark(i)
+            # memory writes whose memory just became live
+            again = [i for i, it in enumerate(items)
+                     if i not in live and isinstance(it, MemWrite)
+                     and it.mem in live_mems]
+            # memory declarations for live memories
+            again += [i for i, it in enumerate(items)
+                      if i not in live and isinstance(it, Memory)
+                      and it.name in live_mems]
+            # drivers of newly-needed nets
+            again += [w for n in needed for w in fo.writers.get(n, ())
+                      if w not in live]
+            if not again:
+                break
+            pending = again
+
+        dead = {i for i in range(len(items)) if i not in live}
+        if not dead:
+            return n_pruned
+        m.drop_items(dead)
+        removed = n_pruned + len(dead) + m.prune_nets()
+        self._invalidate(m)
+        return removed
+
+    def _invalidate(self, m: RTLModule) -> None:
+        if self.am is not None:
+            self.am.invalidate(func=m)
+
+    @staticmethod
+    def _prune_controller_outputs(m: RTLModule) -> int:
+        """A controller's completion pulse (``endp``) is a register even
+        when nothing consumes it (the last loop of a function with no
+        results); drop the unread register from the FSM."""
+        read: set[str] = set()
+        for it in m.items:
+            read.update(it.reads())
+        n = 0
+        for it in m.items:
+            if isinstance(it, LoopController) and it.endp and it.endp not in read:
+                m.nets.pop(it.endp, None)
+                it.endp = ""
+                n += 1
+        return n
+
+
+@register_pass
+class ShiftRegMerge(RTLPass):
+    """Shift-register merging/sharing.  Chains with the same source
+    expression, width and reset behaviour share hardware: equal depths
+    collapse to one chain; a deeper chain re-taps the tail of the deepest
+    shallower chain (delay d2 becomes d2-d1 cycles after the shared d1
+    tail)."""
+
+    name = "rtl-merge-srl"
+
+    def run_module(self, m: RTLModule) -> int:
+        groups: dict[tuple, list[ShiftReg]] = {}
+        multi_written = self._multi_written(m)
+        for it in m.items:
+            if isinstance(it, ShiftReg) and it.dest not in multi_written:
+                key = (it.src.key(), it.width, it.reset_zero)
+                groups.setdefault(key, []).append(it)
+        n = 0
+        drop: set[int] = set()
+        for chain in groups.values():
+            if len(chain) < 2:
+                continue
+            chain.sort(key=lambda s: s.depth)
+            kept = chain[0]
+            kept_total = kept.depth  # cumulative delay of kept.dest from the source
+            for dup in chain[1:]:
+                total = dup.depth
+                if total == kept_total:
+                    m.replace_net(dup.dest, kept.dest)
+                    drop.add(m.items.index(dup))
+                    m.nets.pop(dup.dest, None)
+                else:
+                    # re-tap: source the deeper chain from the current tail,
+                    # keeping only the residual depth beyond it
+                    dup.src = Ref(kept.dest)
+                    dup.depth = total - kept_total
+                    kept, kept_total = dup, total
+                n += 1
+        if drop:
+            m.drop_items(drop)
+        if n:
+            m.prune_nets()
+            if self.am is not None:
+                self.am.invalidate(func=m)
+        return n
+
+    @staticmethod
+    def _multi_written(m: RTLModule) -> set[str]:
+        seen: set[str] = set()
+        multi: set[str] = set()
+        for it in m.items:
+            for w in it.writes():
+                (multi if w in seen else seen).add(w)
+        return multi
+
+
+@register_pass
+class CombShare(RTLPass):
+    """Duplicate-comb-expression sharing: structurally identical
+    ``CombAssign`` right-hand sides collapse onto the first driver.  An
+    output-port duplicate keeps its assign but re-points it at the shared
+    net (ports must stay driven)."""
+
+    name = "rtl-share-comb"
+
+    def run_module(self, m: RTLModule) -> int:
+        n = 0
+        changed = True
+        while changed:  # sharing can make further items structurally equal
+            changed = False
+            seen: dict[tuple, CombAssign] = {}
+            ports = m.port_names()
+            drop: set[int] = set()
+            for i, it in enumerate(m.items):
+                if not isinstance(it, CombAssign):
+                    continue
+                key = it.expr.key()
+                first = seen.get(key)
+                if first is None:
+                    seen[key] = it
+                    continue
+                if isinstance(it.expr, Ref) or it.dest == first.dest:
+                    continue  # plain aliases gain nothing
+                if it.dest in ports:
+                    it.expr = Ref(first.dest)
+                else:
+                    m.replace_net(it.dest, first.dest)
+                    m.nets.pop(it.dest, None)
+                    drop.add(i)
+                n += 1
+                changed = True
+            if drop:
+                m.drop_items(drop)
+        if n:
+            m.prune_nets()
+            if self.am is not None:
+                self.am.invalidate(func=m)
+        return n
+
+
+@register_pass
+class ControllerMerge(RTLPass):
+    """Merge structurally identical loop controllers.  After full unrolling,
+    replicated loop nests (e.g. the 256 PE k-loops of the gemm systolic
+    array) produce byte-identical counter FSMs: same start pulse, bounds,
+    step and II.  Two such FSMs are deterministic machines with identical
+    inputs, so their outputs (``iv``/``iter``/``endp``/``active``) are
+    cycle-for-cycle equal and one copy can drive every consumer."""
+
+    name = "rtl-merge-ctrl"
+
+    def run_module(self, m: RTLModule) -> int:
+        groups: dict[tuple, LoopController] = {}
+        n = 0
+        drop: set[int] = set()
+        for i, it in enumerate(m.items):
+            if not isinstance(it, LoopController):
+                continue
+            key = (it.start.key(), it.lb.key(), it.ub.key(), it.step.key(),
+                   it.ii, it.inner_end.key() if it.inner_end is not None else None,
+                   it.ivw)
+            kept = groups.get(key)
+            if kept is None:
+                groups[key] = it
+                continue
+            if it.endp and not kept.endp:
+                kept.endp = it.endp  # keep driving the consumed pulse
+            else:
+                for old, new in (((it.endp, kept.endp),) if it.endp else ()):
+                    m.replace_net(old, new)
+                    m.nets.pop(old, None)
+            for old, new in ((it.iv, kept.iv), (it.iter_net, kept.iter_net),
+                             (it.active, kept.active)):
+                m.replace_net(old, new)
+                m.nets.pop(old, None)
+            if it.iicnt:
+                m.nets.pop(it.iicnt, None)
+            drop.add(i)
+            n += 1
+        if drop:
+            m.drop_items(drop)
+            m.prune_nets()
+            if self.am is not None:
+                self.am.invalidate(func=m)
+        return n
+
+
+@register_pass
+class MemReadShare(RTLPass):
+    """Share duplicate synchronous memory reads: identical (memory, bank,
+    address, enable) reads return the same data — the paper's §4.4 broadcast
+    (same-address parallel reads are one physical port access), so one read
+    register can feed every consumer."""
+
+    name = "rtl-share-mem"
+
+    def run_module(self, m: RTLModule) -> int:
+        seen: dict[tuple, MemRead] = {}
+        n = 0
+        drop: set[int] = set()
+        for i, it in enumerate(m.items):
+            if not isinstance(it, MemRead):
+                continue
+            key = (it.mem, it.bank, it.addr.key(), it.en.key())
+            kept = seen.get(key)
+            if kept is None:
+                seen[key] = it
+                continue
+            m.replace_net(it.dest, kept.dest)
+            m.nets.pop(it.dest, None)
+            drop.add(i)
+            n += 1
+        if drop:
+            m.drop_items(drop)
+            m.prune_nets()
+            if self.am is not None:
+                self.am.invalidate(func=m)
+        return n
+
+
+#: Default post-lowering RTL pipeline.  Controller merging first (it unifies
+#: induction-variable nets, which makes address/compute expressions
+#: structurally equal), then comb-expression sharing, then the broadcast
+#: read share (now that addresses are unified), shift-register merging, and
+#: a final dead-net sweep.  The PassManager's fixpoint loop re-runs the
+#: sequence while any pass still fires.
+RTL_PIPELINE_SPEC = "rtl-merge-ctrl,rtl-share-comb,rtl-share-mem,rtl-merge-srl,rtl-dce"

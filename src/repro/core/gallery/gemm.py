@@ -33,6 +33,20 @@ def build(n: int = 16):
     COMPUTE_START = 1 + LOAD + 1
     DRAIN_START = COMPUTE_START + n + 3
 
+    # the PE compute op: one multiply-accumulate step, combinational
+    # (result delay 0) — every PE of the systolic grid calls it, so in
+    # hierarchical emission the grid is 256 instances of this one module
+    with b.func(
+        "mac",
+        [ir.i32, ir.i32, ir.i32],
+        ["a", "bb", "c"],
+        result_types=[ir.i32],
+        result_delays=[0],
+    ) as g:
+        ga, gb, gc = g.args
+        gm = b.mult(ga, gb, at=g.t)
+        b.ret([b.add(gm, gc)])
+
     with b.func("gemm", [rmem, rmem, wmem], ["A", "B", "C"]) as f:
         A, B, C = f.args
         # row-banked A buffer: dim0 distributed (16 banks), dim1 packed
@@ -79,9 +93,8 @@ def build(n: int = 16):
                     b.yield_(at=lk.time + 1)
                     a = b.read(Abr, [pi.iv, lk.iv], at=lk.time)      # bank pi, addr k
                     bv = b.read(Bbr, [lk.iv, pj.iv], at=lk.time)     # bank pj, addr k
-                    m = b.mult(a, bv)                                # comb, at tk+1
                     old = b.read(AccR, [pi.iv, pj.iv], at=lk.time + 1)
-                    s = b.add(m, old)
+                    s = b.call("mac", [a, bv, old], at=lk.time + 1)  # comb, at tk+1
                     b.write(s, AccW, [pi.iv, pj.iv], at=lk.time + 1)
 
         # ---- drain: one result per cycle through the C port ----

@@ -57,6 +57,10 @@ from .strength_reduce import StrengthReduce, strength_reduce
 from .inline import Inline, inline_calls
 from .unroll import Unroll, unroll_loops
 from .schedule_transforms import PipelineLoop, Retime, pipeline_loops, retime
+# RTL-level passes (they run on an RTLDesign, not an HIR Module, but share
+# the registry/PassManager infrastructure and spec naming)
+from ..codegen.rtl import (RTL_PIPELINE_SPEC, CombShare, ControllerMerge,
+                           DeadNetElim, MemReadShare, ShiftRegMerge)
 
 #: Legacy list-of-callables form of the default pipeline (kept for direct
 #: imports; the declarative form is ``DEFAULT_PIPELINE_SPEC``).
@@ -90,6 +94,7 @@ __all__ = [
     "DEFAULT_PIPELINE_SPEC",
     "CODEGEN_PIPELINE_SPEC",
     "SCHEDULE_PIPELINE_SPEC",
+    "RTL_PIPELINE_SPEC",
     "AnalysisManager",
     "FunctionAnalysis",
     "register_analysis",
@@ -122,4 +127,9 @@ __all__ = [
     "Unroll",
     "PipelineLoop",
     "Retime",
+    "DeadNetElim",
+    "ShiftRegMerge",
+    "CombShare",
+    "ControllerMerge",
+    "MemReadShare",
 ]

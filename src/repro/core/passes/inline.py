@@ -22,15 +22,17 @@ from ..ir import FuncOp, Module, Operation, Region, Time, Value
 from .unroll import _clone_op
 
 
-def _inline_region(module: Module, func: FuncOp, region: Region) -> int:
+def _inline_region(module: Module, func: FuncOp, region: Region,
+                   only: set[str] | None = None) -> int:
     n = 0
     new_ops: list[Operation] = []
     for op in region.ops:
         for r in op.regions:
-            n += _inline_region(module, func, r)
+            n += _inline_region(module, func, r, only)
         if op.opname == "call":
             callee = module.funcs.get(op.attrs["callee"])
-            if callee is not None and not callee.attrs.get("external"):
+            if (callee is not None and not callee.attrs.get("external")
+                    and (only is None or callee.name in only)):
                 assert op.start is not None, "call must be scheduled"
                 vmap: dict[Value, Value] = {}
                 for formal, actual in zip(callee.args, op.operands):
@@ -60,15 +62,19 @@ def _inline_region(module: Module, func: FuncOp, region: Region) -> int:
     return n
 
 
-def inline_calls(module: Module, entry: str | None = None) -> int:
-    """Inline all internal calls (transitively).  Returns call sites inlined."""
+def inline_calls(module: Module, entry: str | None = None,
+                 only: set[str] | None = None) -> int:
+    """Inline internal calls (transitively).  ``only`` restricts inlining to
+    the named callees (hierarchical emission uses this to flatten trivial
+    functions while keeping non-trivial ones as modules).  Returns call
+    sites inlined."""
     total = 0
     for _ in range(16):  # bounded transitive inlining
         n = 0
         for f in module.funcs.values():
             if f.attrs.get("external"):
                 continue
-            n += _inline_region(module, f, f.body)
+            n += _inline_region(module, f, f.body, only)
         total += n
         if n == 0:
             break

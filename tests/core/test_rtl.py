@@ -1,0 +1,346 @@
+"""Unit tests for the structured RTL netlist IR (core.codegen.rtl): module
+construction, the printer, the net-fanout analysis and each RTL pass on
+hand-built netlists, plus pipeline idempotence on a real kernel."""
+
+import pytest
+
+from repro.core.codegen import lint_verilog
+from repro.core.codegen.rtl import (RTL_PIPELINE_SPEC, Binop, CombAssign,
+                                    CombShare, Const, ControllerMerge,
+                                    DeadNetElim, Instance, LoopController,
+                                    MemRead, Memory, MemReadShare, MemWrite,
+                                    Mux, NetFanoutAnalysis, Ref, RegAssign,
+                                    RTLDesign, RTLModule, ShiftReg,
+                                    ShiftRegMerge, print_rtl)
+from repro.core.codegen.verilog import netlist_of
+from repro.core.passmgr import AnalysisManager, PassManager
+
+
+def _module() -> RTLModule:
+    """in -> +1 -> delay(3) -> out, plus a dead chain."""
+    m = RTLModule("t")
+    m.add_port("clk", "input")
+    m.add_port("rst", "input")
+    m.add_port("t_start", "input")
+    m.add_port("din", "input", 8)
+    m.add_port("dout", "output", 8)
+    m.new_net("inc", 8)
+    m.add(CombAssign("inc", Binop("+", Ref("din"), Const(1, 8), width=8)))
+    m.new_net("d3", 8)
+    m.add(ShiftReg("d3", Ref("inc"), 8, 3))
+    m.add(CombAssign("dout", Ref("d3")))
+    # dead: a comb net and a shift reg nobody reads
+    m.new_net("dead_c", 8)
+    m.add(CombAssign("dead_c", Binop("-", Ref("din"), Const(1, 8), width=8)))
+    m.new_net("dead_sr", 8)
+    m.add(ShiftReg("dead_sr", Ref("dead_c"), 8, 5))
+    return m
+
+
+# ---------------------------------------------------------------------------
+# construction / printing / netlist derivation
+# ---------------------------------------------------------------------------
+
+
+def test_module_construction_and_print():
+    m = _module()
+    assert set(m.nets) == {"inc", "d3", "dead_c", "dead_sr"}
+    text = print_rtl(m)
+    assert text.startswith("// generated")
+    assert "module t (" in text and text.rstrip().endswith("endmodule")
+    assert lint_verilog(text) == []
+
+
+def test_duplicate_net_rejected():
+    m = RTLModule("t")
+    m.new_net("x", 1)
+    with pytest.raises(AssertionError):
+        m.new_net("x", 2)
+
+
+def test_netlist_derivation_counts():
+    m = _module()
+    nl = netlist_of(m)
+    assert sorted(nl.adders) == [8, 8]          # the +1 and the dead -1
+    assert sorted(nl.shift_regs) == [(8, 3), (8, 5)]
+    assert nl.registers == [] and nl.rams == []
+
+
+def test_net_fanout_analysis():
+    m = _module()
+    fo = AnalysisManager().get(NetFanoutAnalysis, m)
+    assert fo.fanout("inc") == 1          # read by the shift reg
+    assert fo.fanout("dead_c") == 1       # read by the dead shift reg
+    assert fo.fanout("dead_sr") == 0
+    assert fo.writers["d3"] != []
+
+
+# ---------------------------------------------------------------------------
+# rtl-dce
+# ---------------------------------------------------------------------------
+
+
+def test_dce_removes_dead_chain_and_keeps_live_path():
+    m = _module()
+    n = DeadNetElim().run_module(m)
+    assert n > 0
+    assert "dead_c" not in m.nets and "dead_sr" not in m.nets
+    assert {"inc", "d3"} <= set(m.nets)
+    assert len(m.items) == 3
+    # idempotent: a second run is a no-op
+    assert DeadNetElim().run_module(m) == 0
+
+
+def test_dce_keeps_memory_with_live_reader_drops_dead_memory():
+    m = RTLModule("t")
+    m.add_port("clk", "input")
+    m.add_port("rst", "input")
+    m.add_port("q", "output", 8)
+    m.add(Memory("live", 1, 16, 8, "lutram"))
+    m.add(MemWrite("live", 0, Const(0, 4), Const(7, 8), Const(1, 1)))
+    m.new_net("rd", 8, "reg")
+    m.add(MemRead("rd", "live", 0, Const(0, 4), Const(1, 1)))
+    m.add(CombAssign("q", Ref("rd")))
+    m.add(Memory("dead", 1, 16, 8, "lutram"))
+    m.add(MemWrite("dead", 0, Const(0, 4), Const(9, 8), Const(1, 1)))
+    DeadNetElim().run_module(m)
+    kinds = [type(it).__name__ for it in m.items]
+    assert kinds.count("Memory") == 1 and kinds.count("MemWrite") == 1
+    assert netlist_of(m).rams == [(1, 16, 8, 2, "lutram")]
+
+
+def test_dce_prunes_unread_controller_end_pulse():
+    m = RTLModule("t")
+    m.add_port("clk", "input")
+    m.add_port("rst", "input")
+    m.add_port("t_start", "input")
+    m.add_port("iv_out", "output", 8)
+    m.new_net("iv", 8, "reg")
+    m.new_net("act", 1, "reg")
+    m.new_net("itr", 1)
+    m.new_net("endp", 1, "reg")
+    m.add(LoopController("l", "iv", 8, "act", "itr", "endp",
+                         start=Ref("t_start"), lb=Const(0, 8), ub=Const(4, 8),
+                         step=Const(1, 8), ii=1))
+    m.add(CombAssign("iv_out", Ref("iv")))
+    n = DeadNetElim().run_module(m)
+    assert n >= 1
+    ctrl = next(it for it in m.items if isinstance(it, LoopController))
+    assert ctrl.endp == "" and "endp" not in m.nets
+    assert lint_verilog(print_rtl(m)) == []
+    reg_count = sum(netlist_of(m).registers)
+    assert reg_count == 1  # only the active flag remains
+
+
+# ---------------------------------------------------------------------------
+# rtl-merge-srl
+# ---------------------------------------------------------------------------
+
+
+def _sr_module():
+    m = RTLModule("t")
+    m.add_port("clk", "input")
+    m.add_port("rst", "input")
+    m.add_port("x", "input", 8)
+    m.add_port("o1", "output", 8)
+    m.add_port("o2", "output", 8)
+    m.add_port("o3", "output", 8)
+    for nm, depth in (("a", 2), ("b", 2), ("c", 5)):
+        m.new_net(nm, 8)
+        m.add(ShiftReg(nm, Ref("x"), 8, depth))
+    m.add(CombAssign("o1", Ref("a")))
+    m.add(CombAssign("o2", Ref("b")))
+    m.add(CombAssign("o3", Ref("c")))
+    return m
+
+
+def test_srl_merge_shares_equal_and_retaps_deeper():
+    m = _sr_module()
+    n = ShiftRegMerge().run_module(m)
+    assert n == 2  # b merged into a; c re-tapped from a
+    srs = [it for it in m.items if isinstance(it, ShiftReg)]
+    assert len(srs) == 2
+    deep = next(s for s in srs if s.dest == "c")
+    assert isinstance(deep.src, Ref) and deep.src.name == "a"
+    assert deep.depth == 3  # 5 total = 2 shared + 3 private
+    # total delayed stages dropped from 9 to 5
+    assert sum(d for _w, d in netlist_of(m).shift_regs) == 5
+    # o2 now reads the shared chain
+    o2 = next(it for it in m.items
+              if isinstance(it, CombAssign) and it.dest == "o2")
+    assert o2.expr.key() == Ref("a").key()
+    assert lint_verilog(print_rtl(m)) == []
+    # idempotent
+    assert ShiftRegMerge().run_module(m) == 0
+
+
+@pytest.mark.parametrize("depths,expected_totals", [
+    ((2, 5, 5), {2: 2, 5: 5}),   # equal deeper chains merge onto one tail
+    ((2, 5, 7), {2: 2, 5: 5, 7: 7}),  # each re-tap keeps the cumulative delay
+    ((3, 3, 3), {3: 3}),
+])
+def test_srl_merge_preserves_cumulative_delays(depths, expected_totals):
+    """Regression: re-tapping must track the cumulative delay from the
+    *source*, not the residual depth of the previous chain — depths (2,5,5)
+    once produced a 7-cycle third chain."""
+    m = RTLModule("t")
+    m.add_port("clk", "input")
+    m.add_port("rst", "input")
+    m.add_port("x", "input", 8)
+    for i, d in enumerate(depths):
+        m.add_port(f"o{i}", "output", 8)
+        m.new_net(f"n{i}", 8)
+        m.add(ShiftReg(f"n{i}", Ref("x"), 8, d))
+        m.add(CombAssign(f"o{i}", Ref(f"n{i}")))
+    ShiftRegMerge().run_module(m)
+    # recover each surviving chain's total delay back to the source
+    srs = {it.dest: it for it in m.items if isinstance(it, ShiftReg)}
+
+    def total(sr):
+        t = sr.depth
+        while isinstance(sr.src, Ref) and sr.src.name in srs:
+            sr = srs[sr.src.name]
+            t += sr.depth
+        return t
+
+    got = sorted(total(sr) for sr in srs.values())
+    assert got == sorted(expected_totals.values())
+    # every output port still sees exactly its original delay
+    for i, d in enumerate(depths):
+        o = next(it for it in m.items
+                 if isinstance(it, CombAssign) and it.dest == f"o{i}")
+        assert total(srs[o.expr.name]) == d, (i, d)
+    assert ShiftRegMerge().run_module(m) == 0  # idempotent
+
+
+def test_srl_merge_respects_reset_and_width():
+    m = RTLModule("t")
+    m.add_port("clk", "input")
+    m.add_port("rst", "input")
+    m.add_port("x", "input", 8)
+    m.add_port("o1", "output", 8)
+    m.add_port("o2", "output", 8)
+    m.new_net("a", 8)
+    m.add(ShiftReg("a", Ref("x"), 8, 2, reset_zero=True))
+    m.new_net("b", 8)
+    m.add(ShiftReg("b", Ref("x"), 8, 2, reset_zero=False))
+    m.add(CombAssign("o1", Ref("a")))
+    m.add(CombAssign("o2", Ref("b")))
+    assert ShiftRegMerge().run_module(m) == 0  # different reset: no merge
+
+
+# ---------------------------------------------------------------------------
+# rtl-share-comb / rtl-share-mem / rtl-merge-ctrl
+# ---------------------------------------------------------------------------
+
+
+def test_comb_share_merges_duplicates_and_keeps_port_driven():
+    m = RTLModule("t")
+    m.add_port("clk", "input")
+    m.add_port("x", "input", 8)
+    m.add_port("out", "output", 8)
+    e = lambda: Binop("+", Ref("x"), Const(3, 8), width=8)
+    m.new_net("u", 8)
+    m.add(CombAssign("u", e()))
+    m.new_net("v", 8)
+    m.add(CombAssign("v", e()))
+    m.add(CombAssign("out", e()))  # an output port with the same expr
+    m.new_net("w", 8)
+    m.add(CombAssign("w", Mux(Ref("clk"), Ref("u"), Ref("v"), 8)))
+    n = CombShare().run_module(m)
+    assert n >= 2
+    assert "v" not in m.nets                      # merged into u
+    out = next(it for it in m.items
+               if isinstance(it, CombAssign) and it.dest == "out")
+    assert out.expr.key() == Ref("u").key()       # port re-pointed, not dropped
+    # the mux collapsed to identical branches referencing u
+    assert sum(isinstance(it, CombAssign) for it in m.items) == 3
+    assert netlist_of(m).adders == [8]
+    assert CombShare().run_module(m) == 0         # idempotent
+
+
+def test_mem_read_share_dedups_broadcast_reads():
+    m = RTLModule("t")
+    m.add_port("clk", "input")
+    m.add_port("en", "input")
+    m.add_port("a", "output", 8)
+    m.add_port("b", "output", 8)
+    m.add(Memory("buf", 1, 16, 8, "lutram"))
+    m.add(MemWrite("buf", 0, Const(1, 4), Const(5, 8), Ref("en")))
+    for nm in ("r1", "r2"):
+        m.new_net(nm, 8, "reg")
+        m.add(MemRead(nm, "buf", 0, Const(1, 4), Ref("en")))
+    m.add(CombAssign("a", Ref("r1")))
+    m.add(CombAssign("b", Ref("r2")))
+    assert MemReadShare().run_module(m) == 1
+    assert "r2" not in m.nets
+    assert sum(isinstance(it, MemRead) for it in m.items) == 1
+    bb = next(it for it in m.items
+              if isinstance(it, CombAssign) and it.dest == "b")
+    assert bb.expr.key() == Ref("r1").key()
+    assert MemReadShare().run_module(m) == 0
+
+
+def test_controller_merge_unifies_identical_fsms():
+    m = RTLModule("t")
+    m.add_port("clk", "input")
+    m.add_port("rst", "input")
+    m.add_port("t_start", "input")
+    m.add_port("o1", "output", 8)
+    m.add_port("o2", "output", 8)
+    for i in (1, 2):
+        m.new_net(f"iv{i}", 8, "reg")
+        m.new_net(f"act{i}", 1, "reg")
+        m.new_net(f"itr{i}", 1)
+        m.new_net(f"endp{i}", 1, "reg")
+        m.add(LoopController(f"l{i}", f"iv{i}", 8, f"act{i}", f"itr{i}",
+                             f"endp{i}", start=Ref("t_start"), lb=Const(0, 8),
+                             ub=Const(16, 8), step=Const(1, 8), ii=1))
+    m.add(CombAssign("o1", Ref("iv1")))
+    m.add(CombAssign("o2", Ref("iv2")))
+    assert ControllerMerge().run_module(m) == 1
+    assert sum(isinstance(it, LoopController) for it in m.items) == 1
+    o2 = next(it for it in m.items
+              if isinstance(it, CombAssign) and it.dest == "o2")
+    assert o2.expr.key() == Ref("iv1").key()
+    assert lint_verilog(print_rtl(m)) == []
+    assert ControllerMerge().run_module(m) == 0
+
+
+# ---------------------------------------------------------------------------
+# pipeline-level behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_rtl_pipeline_runs_via_passmanager_spec():
+    design = RTLDesign({"t": _module()}, entry="t")
+    pm = PassManager.from_spec(RTL_PIPELINE_SPEC)
+    stats = pm.run(design)
+    assert stats["rtl_dce"] > 0
+    # fixpoint reached: a fresh pipeline reports zero rewrites
+    again = PassManager.from_spec(RTL_PIPELINE_SPEC).run(design)
+    assert sum(again.values()) == 0
+
+
+def test_rtl_pipeline_idempotent_on_gallery_kernel():
+    from repro.core.codegen import generate_verilog
+    from repro.core.gallery import GALLERY
+    from repro.core.passes import run_pipeline
+
+    m, entry = GALLERY["conv2d"].build()
+    run_pipeline(m)
+    vs = generate_verilog(m, entry=entry)  # default pipeline already applied
+    design = RTLDesign({entry: vs[entry].rtl}, entry=entry)
+    again = PassManager.from_spec(RTL_PIPELINE_SPEC).run(design)
+    assert sum(again.values()) == 0
+
+
+def test_instances_kept_alive_by_dce():
+    m = RTLModule("top")
+    m.add_port("clk", "input")
+    m.new_net("sub_out", 8)
+    m.add(Instance("child", "u_child", [
+        ("clk", Ref("clk"), False), ("q", Ref("sub_out"), True)]))
+    DeadNetElim().run_module(m)
+    assert any(isinstance(it, Instance) for it in m.items)
+    assert netlist_of(m).instances == ["child"]
