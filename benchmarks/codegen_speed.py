@@ -17,9 +17,12 @@ Each row also carries ``per_pass`` (the PassManager's per-pass wall time and
 rewrite counts for the HIR optimization pipeline) and ``analysis_cache`` (the
 shared AnalysisManager's hit/computed/invalidated counters for the
 verify+optimize flow — ``hits`` > 0 shows analyses being reused across the
-default pipeline instead of re-derived per consumer).  ``--json`` (or
-``main(json_out=True)``) emits the rows as JSON; ``--kernels a,b`` and
-``--reps N`` bound the run (the CI smoke step uses a single small kernel).
+default pipeline instead of re-derived per consumer).  ``backend_emit_s``
+times each netlist printer (verilog / systemverilog / vhdl / circt) over the
+same optimized RTL design — pure printing cost, since every backend is a
+printer over the shared structure.  ``--json`` (or ``main(json_out=True)``)
+emits the rows as JSON; ``--kernels a,b`` and ``--reps N`` bound the run
+(the CI smoke step uses a single small kernel).
 """
 
 from __future__ import annotations
@@ -30,6 +33,8 @@ import sys
 import time
 from copy import deepcopy
 
+from repro.core.codegen import BACKENDS, get_printer
+from repro.core.codegen.rtl import RTLDesign
 from repro.core.codegen.verilog import generate_verilog
 from repro.core.gallery import GALLERY, PAPER_BENCHMARKS
 from repro.core.hls.eraser import erase_schedule
@@ -75,7 +80,17 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
         # post-lowering netlist passes report rewrites/wall time exactly like
         # the HIR-level passes above
         rtl_pm = PassManager.from_spec(RTL_PIPELINE_SPEC)
-        generate_verilog(stats_m, entry, am=stats_am, rtl_pass_manager=rtl_pm)
+        stats_mods = generate_verilog(stats_m, entry, am=stats_am,
+                                      rtl_pass_manager=rtl_pm)
+
+        # per-backend emission timing: every printer reads the *same*
+        # optimized RTLModules, so this isolates pure printing cost
+        rtl_design = RTLDesign({n: vm.rtl for n, vm in stats_mods.items()})
+        backend_emit = {}
+        for bname in sorted(BACKENDS):
+            printer = get_printer(bname)
+            backend_emit[bname] = round(
+                _time(lambda p=printer: p.print_design(rtl_design), reps), 5)
 
         def hir_pipeline():
             m = deepcopy(base_module)
@@ -137,6 +152,8 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
             "per_pass": stats_pm.stats_dict(),
             # RTL netlist pipeline statistics (same shape as per_pass)
             "rtl_per_pass": rtl_pm.stats_dict(),
+            # pure printing wall time per backend over the same RTL design
+            "backend_emit_s": backend_emit,
             # shared-analysis cache counters for the verify+optimize flow
             "analysis_cache": stats_am.stats_dict(),
         })
@@ -172,6 +189,10 @@ def main(json_out: bool = False, bench_names=None, reps: int = 3):
         print(f"  {r['kernel']:12s} " + (", ".join(
             f"{k}: {v['rewrites']}rw/{v['wall_s'] * 1e3:.1f}ms"
             for k, v in busy.items()) or "no rewrites"))
+    print("\nper-backend emission time (pure printing over the same RTL design):")
+    for r in rows:
+        print(f"  {r['kernel']:12s} " + ", ".join(
+            f"{b}: {s * 1e3:.1f}ms" for b, s in r["backend_emit_s"].items()))
     print("\nanalysis cache (shared verify+optimize AnalysisManager):")
     for r in rows:
         ac = r["analysis_cache"]

@@ -1,0 +1,21 @@
+"""Repo-wide pytest configuration.
+
+``--regen-goldens`` rewrites the backend golden files under
+``tests/goldens/`` from the current emitted output instead of comparing
+against them (used by ``tests/core/test_backends.py``).
+"""
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-goldens", action="store_true", default=False,
+        help="regenerate tests/goldens/* from current backend output "
+             "instead of comparing",
+    )
+
+
+@pytest.fixture
+def regen_goldens(request):
+    return request.config.getoption("--regen-goldens")

@@ -46,6 +46,18 @@ def main():
     print(f"== Verilog: {len(v.splitlines())} lines, module {entry} ==")
     print("\n".join(v.splitlines()[:12]), "\n...")
 
+    # -- 3b. same netlist, other backends ----------------------------------
+    # every backend is a printer over the same optimized RTLModule; the
+    # resource summary is derived from the structure, so it never changes
+    from repro.core.codegen import get_printer
+    from repro.core.codegen.rtl import RTLDesign
+
+    design = RTLDesign({n: vm.rtl for n, vm in vmods.items()})
+    for backend in ("systemverilog", "vhdl", "circt"):
+        text = get_printer(backend).print_design(design)
+        first = next(l for l in text.splitlines() if l and not l.startswith(("//", "--")))
+        print(f"== {backend}: {len(text.splitlines())} lines | {first[:60]}")
+
     # -- 4. same IR -> Pallas TPU kernel (interpret mode on CPU) ------------
     inputs = array_add.make_inputs(n=64)
     fn = lower_to_pallas(module, entry)

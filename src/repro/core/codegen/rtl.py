@@ -32,7 +32,6 @@ The module also hosts the RTL pass pipeline, registered on the same
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Iterator, Optional, Union
 
@@ -706,143 +705,22 @@ class RTLDesign:
 # ---------------------------------------------------------------------------
 
 
-def _decl(net: Net) -> str:
-    sgn = " signed" if net.signed else ""
-    rng = f" [{net.width - 1}:0]" if net.width > 1 else ""
-    c = f" // {net.comment}" if net.comment else ""
-    return f"{net.kind}{sgn}{rng} {net.name};{c}"
-
-
-def _print_item(it: Item, out: list[str], decls: list[str]) -> None:
-    loc = f" // {it.loc}" if it.loc is not UNKNOWN_LOC else ""
-    if isinstance(it, CombAssign):
-        out.append(f"assign {it.dest} = {it.expr};{loc}")
-    elif isinstance(it, ShiftReg):
-        nm, d, w = it.dest, it.depth, it.width
-        rst = "rst ? " if it.reset_zero else ""
-        if d == 1:
-            decls.append(f"reg [{w - 1}:0] {nm}_q;" if w > 1 else f"reg {nm}_q;")
-            z = zeros(w)
-            src = f"{z} : {it.src}" if it.reset_zero else f"{it.src}"
-            out.append(f"always @(posedge clk) {nm}_q <= {rst}{src};{loc}")
-            out.append(f"assign {nm} = {nm}_q;")
-            return
-        decls.append(f"reg [{w - 1}:0] {nm}_sr [0:{d - 1}];")
-        out.append(f"always @(posedge clk) begin{loc}")
-        if it.reset_zero:
-            out.append(f"  {nm}_sr[0] <= rst ? {zeros(w)} : {it.src};")
-        else:
-            out.append(f"  {nm}_sr[0] <= {it.src};")
-        for s in range(1, d):
-            if it.reset_zero:
-                out.append(f"  {nm}_sr[{s}] <= rst ? {zeros(w)} : {nm}_sr[{s - 1}];")
-            else:
-                out.append(f"  {nm}_sr[{s}] <= {nm}_sr[{s - 1}];")
-        out.append("end")
-        out.append(f"assign {nm} = {nm}_sr[{d - 1}];")
-    elif isinstance(it, RegAssign):
-        guard = f"if ({it.en}) " if it.en is not None else ""
-        out.append(f"always @(posedge clk) {guard}{it.dest} <= {it.src};{loc}")
-    elif isinstance(it, Memory):
-        style = "block" if it.kind == "bram" else "distributed"
-        for bk in range(it.banks):
-            decls.append(
-                f'(* ram_style = "{style}" *) reg [{it.width - 1}:0] '
-                f"{it.name}_ram{bk} [0:{max(it.depth - 1, 1)}];"
-            )
-    elif isinstance(it, MemRead):
-        out.append(
-            f"always @(posedge clk) if ({it.en}) "
-            f"{it.dest} <= {it.mem}_ram{it.bank}[{it.addr}];{loc}"
-        )
-    elif isinstance(it, MemWrite):
-        out.append(
-            f"always @(posedge clk) if ({it.en}) "
-            f"{it.mem}_ram{it.bank}[{it.addr}] <= {it.data};{loc}"
-        )
-    elif isinstance(it, LoopController):
-        _print_controller(it, out)
-    elif isinstance(it, Instance):
-        conns = ", ".join(f".{p}({e})" for p, e, _o in it.conns)
-        out.append(f"{it.module} {it.inst} ({conns});{loc}")
-    elif isinstance(it, PortConflictAssert):
-        out.append("`ifndef SYNTHESIS")
-        cond = " + ".join(f"(({e}) ? 1 : 0)" for e in it.ens)
-        out.append(
-            f"always @(posedge clk) if (({cond}) > 1) "
-            f'$error("port conflict on {it.bus} (UB 4.5)");'
-        )
-        out.append("`endif")
-    else:  # pragma: no cover - future item kinds
-        raise NotImplementedError(type(it).__name__)
-
-
-def _print_controller(it: LoopController, out: list[str]) -> None:
-    iv, act, itr, endp = it.iv, it.active, it.iter_net, it.endp
-    step_up = f"{iv} + {it.step}"
-    more = f"({step_up} < {it.ub})"
-    if it.ii is not None:
-        ii = it.ii
-        cond_next = f"{it.iicnt} == {ii - 1}" if ii > 1 else "1'b1"
-        out.append(f"// controller: hir.for %{iv} II={ii} {it.loc}")
-        out.append(
-            f"assign {itr} = {it.start} | ({act} && ({cond_next}) && {more});")
-        out.append("always @(posedge clk) begin")
-        if ii > 1:
-            out.append(f"  if (rst) begin {act} <= 0; {it.iicnt} <= 0; end")
-        else:
-            out.append(f"  if (rst) {act} <= 0;")
-        out.append(f"  else if ({it.start}) begin")
-        init_cnt = f" {it.iicnt} <= 0;" if ii > 1 else ""
-        out.append(f"    {act} <= 1; {iv} <= {it.lb};{init_cnt}")
-        out.append(f"  end else if ({act}) begin")
-        if ii > 1:
-            out.append(f"    {it.iicnt} <= ({cond_next}) ? 0 : {it.iicnt} + 1;")
-        out.append(f"    if ({cond_next}) begin")
-        out.append(f"      if ({more}) {iv} <= {step_up};")
-        out.append(f"      else {act} <= 0;")
-        out.append("    end")
-        out.append("  end")
-        out.append("end")
-        if endp:
-            out.append(
-                f"always @(posedge clk) {endp} <= "
-                f"{act} && ({cond_next}) && ({step_up} >= {it.ub});")
-    else:
-        inner = it.inner_end
-        out.append(f"// controller: sequential hir.for %{iv} {it.loc}")
-        out.append(f"assign {itr} = {it.start} | (({inner}) && {act} && {more});")
-        out.append("always @(posedge clk) begin")
-        out.append(f"  if (rst) {act} <= 0;")
-        out.append(f"  else if ({it.start}) begin {act} <= 1; {iv} <= {it.lb}; end")
-        out.append(f"  else if (({inner}) && {act}) begin")
-        out.append(f"    if ({more}) {iv} <= {step_up};")
-        out.append(f"    else {act} <= 0;")
-        out.append("  end")
-        out.append("end")
-        if endp:
-            out.append(
-                f"always @(posedge clk) {endp} <= ({inner}) && {act} && "
-                f"({step_up} >= {it.ub});")
-
-
 def print_rtl(m: RTLModule) -> str:
-    """Print one RTLModule as synthesizable Verilog."""
-    hdr = f"// generated by repro.core.codegen from @{m.source_func} ({m.loc})\n"
-    ports = ",\n    ".join(
-        f"{p.dir} wire{f' [{p.width - 1}:0]' if p.width > 1 else ''} {p.name}"
-        for p in m.ports)
-    hdr += f"module {m.name} (\n    {ports}\n);\n"
-    decls = [_decl(n) for n in m.nets.values()]
-    lines: list[str] = []
-    for it in m.items:
-        _print_item(it, lines, decls)
-    body = "\n".join("  " + l for l in decls + [""] + lines)
-    return hdr + body + "\nendmodule\n"
+    """Print one RTLModule as synthesizable Verilog (the default backend).
+
+    Kept as the historical entry point; it now delegates to the backend
+    printer layer (``core.codegen.backends``) — ``VerilogPrinter`` produces
+    byte-identical output, and sibling printers emit SystemVerilog, VHDL and
+    CIRCT ``hw``-dialect MLIR from the same structure."""
+    from .backends import VerilogPrinter
+
+    return VerilogPrinter().print_module(m)
 
 
 def print_design(d: RTLDesign) -> str:
-    return "\n".join(print_rtl(m) for m in d)
+    from .backends import VerilogPrinter
+
+    return VerilogPrinter().print_design(d)
 
 
 # ---------------------------------------------------------------------------

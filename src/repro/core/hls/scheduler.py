@@ -183,13 +183,15 @@ def hls_schedule(module: Module, pipeline_loops: bool = True) -> HLSResult:
 
 
 def hls_compile(module: Module, entry: Optional[str] = None,
-                pipeline: Optional[str] = None):
-    """Full HLS pipeline: schedule + verify + optimize + Verilog codegen.
+                pipeline: Optional[str] = None, backend: str = "verilog"):
+    """Full HLS pipeline: schedule + verify + optimize + netlist codegen.
     Returns (HLSResult, {name: VerilogModule}).
 
     ``pipeline`` is a textual PassManager spec (default: the paper-benchmark
-    optimization pipeline); pass ``""`` to skip optimization.  The
-    PassManager used is exposed on the returned HLSResult as
+    optimization pipeline); pass ``""`` to skip optimization.  ``backend``
+    selects the netlist printer (``"verilog"`` | ``"systemverilog"`` |
+    ``"vhdl"`` | ``"circt"``); the resource summaries are backend-invariant.
+    The PassManager used is exposed on the returned HLSResult as
     ``result.pass_manager`` for per-pass statistics (and its
     ``.analysis_manager`` for analysis-cache statistics)."""
     from ..codegen import generate_verilog
@@ -205,5 +207,5 @@ def hls_compile(module: Module, entry: Optional[str] = None,
         pm = PassManager.from_spec(spec, analysis_manager=am)
         pm.run(module)
         res.pass_manager = pm
-    vs = generate_verilog(module, entry=entry, am=am)
+    vs = generate_verilog(module, entry=entry, am=am, backend=backend)
     return res, vs
