@@ -28,10 +28,12 @@ emits the rows as JSON; ``--kernels a,b`` and ``--reps N`` bound the run
 from __future__ import annotations
 
 import argparse
+import cProfile
+import io
 import json
+import pstats
 import sys
 import time
-from copy import deepcopy
 
 from repro.core.codegen import BACKENDS, get_printer
 from repro.core.codegen.rtl import RTLDesign
@@ -71,7 +73,7 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
         # computes loop-info/port-accesses, the pipeline's schedule-preserving
         # passes keep them cached, port-demotion re-uses them (cache hits).
         stats_am = AnalysisManager()
-        stats_m = deepcopy(base_module)
+        stats_m = base_module.clone()
         verifier.verify(stats_m, am=stats_am)
         stats_pm = PassManager.from_spec(DEFAULT_PIPELINE_SPEC,
                                          analysis_manager=stats_am)
@@ -80,8 +82,10 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
         # post-lowering netlist passes report rewrites/wall time exactly like
         # the HIR-level passes above
         rtl_pm = PassManager.from_spec(RTL_PIPELINE_SPEC)
+        phase_stats: dict = {}
         stats_mods = generate_verilog(stats_m, entry, am=stats_am,
-                                      rtl_pass_manager=rtl_pm)
+                                      rtl_pass_manager=rtl_pm,
+                                      timings=phase_stats)
 
         # per-backend emission timing: every printer reads the *same*
         # optimized RTLModules, so this isolates pure printing cost
@@ -93,14 +97,14 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
                 _time(lambda p=printer: p.print_design(rtl_design), reps), 5)
 
         def hir_pipeline():
-            m = deepcopy(base_module)
+            m = base_module.clone()
             am = AnalysisManager()
             verifier.verify(m, am=am)
             PassManager.from_spec(DEFAULT_PIPELINE_SPEC, analysis_manager=am).run(m)
             generate_verilog(m, entry, am=am)
 
         def hls_pipeline():
-            m = erase_schedule(deepcopy(base_module))
+            m = erase_schedule(base_module.clone())
             res = hls_schedule(m)
             # HLS trusts its own scheduler: non-strict sanity verify only
             verifier.verify(m, strict_schedule=False, raise_on_error=False)
@@ -108,21 +112,21 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
             generate_verilog(m, entry)
 
         # optimizer-only: the seed's blind fixpoint sweep vs the worklist
-        # driver on identical input (deepcopy excluded from the timing).
+        # driver on identical input (Module.clone excluded from the timing).
         # Measured twice: on the kernel as built (small IR — driver overhead
         # must not regress) and on the inlined+unrolled IR codegen actually
         # optimizes (real region sizes — where O(region²) vs O(uses) shows).
         def _opt_times(mod, n_reps):
             tl = min(_time(lambda m=m: run_legacy_sweep(m), reps=1)
-                     for m in [deepcopy(mod) for _ in range(n_reps)])
+                     for m in [mod.clone() for _ in range(n_reps)])
             tw = min(
                 _time(lambda m=m: PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(m),
                       reps=1)
-                for m in [deepcopy(mod) for _ in range(n_reps)])
+                for m in [mod.clone() for _ in range(n_reps)])
             return tl, tw
 
         t_opt_legacy, t_opt_worklist = _opt_times(base_module, max(reps, 5))
-        unrolled = deepcopy(base_module)
+        unrolled = base_module.clone()
         PassManager.from_spec("inline,unroll", fixpoint=False).run(unrolled)
         unrolled_ops = sum(1 for _ in unrolled.walk())
         t_opt_ul, t_opt_uw = _opt_times(unrolled, reps)
@@ -152,6 +156,10 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
             "per_pass": stats_pm.stats_dict(),
             # RTL netlist pipeline statistics (same shape as per_pass)
             "rtl_per_pass": rtl_pm.stats_dict(),
+            # uniform whole-pipeline phase accounting (same schema again):
+            # pre-codegen passes + lower + RTL passes + emit, as filled by
+            # generate_verilog(timings=)
+            "phase_stats": phase_stats,
             # pure printing wall time per backend over the same RTL design
             "backend_emit_s": backend_emit,
             # shared-analysis cache counters for the verify+optimize flow
@@ -160,7 +168,33 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
     return rows
 
 
-def main(json_out: bool = False, bench_names=None, reps: int = 3):
+def profile_pipeline(bench_names=None, top: int = 20) -> None:
+    """--profile: run the full HIR pipeline (verify -> optimize -> codegen)
+    for each kernel under cProfile and print the top cumulative hotspots —
+    so perf work starts from data, not guesses."""
+    names = [n for n in (bench_names or PAPER_BENCHMARKS) if n != "fifo"]
+    for name in names:
+        gal = GALLERY[name]
+        base_module, entry = gal.build()
+        m = base_module.clone()
+        pr = cProfile.Profile()
+        pr.enable()
+        am = AnalysisManager()
+        verifier.verify(m, am=am)
+        PassManager.from_spec(DEFAULT_PIPELINE_SPEC, analysis_manager=am).run(m)
+        generate_verilog(m, entry, am=am)
+        pr.disable()
+        buf = io.StringIO()
+        pstats.Stats(pr, stream=buf).sort_stats("cumulative").print_stats(top)
+        print(f"\n=== {name}: top-{top} cumulative hotspots ===")
+        print(buf.getvalue())
+
+
+def main(json_out: bool = False, bench_names=None, reps: int = 3,
+         profile: bool = False):
+    if profile:
+        profile_pipeline(bench_names)
+        return []
     rows = run(bench_names, reps=reps)
     if json_out:
         print(json.dumps(rows, indent=2))
@@ -209,6 +243,10 @@ if __name__ == "__main__":
     ap.add_argument("--kernels", default=None,
                     help="comma-separated kernel names (default: paper benchmarks)")
     ap.add_argument("--reps", type=int, default=3, help="timing repetitions")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the pipeline under cProfile and print the "
+                         "top-20 cumulative hotspots instead of benchmarking")
     args = ap.parse_args()
     names = [s.strip() for s in args.kernels.split(",")] if args.kernels else None
-    main(json_out=args.json, bench_names=names, reps=args.reps)
+    main(json_out=args.json, bench_names=names, reps=args.reps,
+         profile=args.profile)

@@ -3,7 +3,6 @@ automatic precision optimization (+ the passes it enables)."""
 
 from __future__ import annotations
 
-from copy import deepcopy
 
 from repro.core.codegen.resources import report_module
 from repro.core.codegen.verilog import generate_verilog
@@ -30,7 +29,7 @@ def _resources(module, entry) -> dict:
 def run() -> list[dict]:
     rows = []
     m0, entry = transpose.build()
-    rows.append({"flow": "HIR (no opt)", **_resources(deepcopy(m0), entry),
+    rows.append({"flow": "HIR (no opt)", **_resources(m0.clone(), entry),
                  "paper": PAPER["HIR (no opt)"]})
 
     m1, _ = transpose.build()

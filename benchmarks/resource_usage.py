@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import argparse
 import json
-from copy import deepcopy
 
 from repro.core.codegen.resources import report_design
 from repro.core.codegen.verilog import generate_verilog
@@ -47,17 +46,17 @@ def run(bench_names=None) -> list[dict]:
         gal = GALLERY[name]
         module, entry = gal.build()
 
-        hir_m = deepcopy(module)
+        hir_m = module.clone()
         PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(hir_m)
 
         # direct emission (no RTL pipeline) vs the optimized RTL netlist
-        pre = _total(generate_verilog(deepcopy(hir_m), entry, rtl_spec=None), entry)
+        pre = _total(generate_verilog(hir_m.clone(), entry, rtl_spec=None), entry)
         rtl_pm = PassManager.from_spec(RTL_PIPELINE_SPEC)
-        hir_res = _total(generate_verilog(deepcopy(hir_m), entry,
+        hir_res = _total(generate_verilog(hir_m.clone(), entry,
                                           rtl_pass_manager=rtl_pm), entry)
         delta = {k: hir_res[k] - pre[k] for k in pre}
         # hierarchical (non-inlined) emission of the same design
-        hier = _total(generate_verilog(deepcopy(hir_m), entry,
+        hier = _total(generate_verilog(hir_m.clone(), entry,
                                        hierarchy="modules"), entry)
 
         row = {"kernel": name, "hir": hir_res,
@@ -67,7 +66,7 @@ def run(bench_names=None) -> list[dict]:
                "paper_vivado": dict(zip(("LUT", "FF", "DSP", "BRAM"), PAPER[name][0])),
                "paper_hir": dict(zip(("LUT", "FF", "DSP", "BRAM"), PAPER[name][1]))}
         if name != "fifo":  # paper compares FIFO against hand Verilog, not HLS
-            hls_m = erase_schedule(deepcopy(module))
+            hls_m = erase_schedule(module.clone())
             hls_schedule(hls_m)
             PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(hls_m)
             row["hls"] = _total(generate_verilog(hls_m, entry), entry)

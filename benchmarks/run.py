@@ -7,11 +7,14 @@ report mandated by the assignment:
   roofline         EXPERIMENTS §Roofline source (reads dry-run artifacts)
 
 ``python -m benchmarks.run [name ...]`` runs all (or the named) benchmarks
-and writes artifacts/bench/<name>.json.
+and writes artifacts/bench/<name>.json.  ``--profile`` reruns the suites
+that support it (codegen_speed) under cProfile, printing the top cumulative
+hotspots instead of benchmarking — the starting point for perf PRs.
 """
 
 from __future__ import annotations
 
+import inspect
 import json
 import sys
 import time
@@ -22,6 +25,9 @@ ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
+    profile = "--profile" in argv
+    if profile:
+        argv = [a for a in argv if a != "--profile"]
     from . import (codegen_scaling, codegen_speed, precision_opt,
                    resource_usage, roofline)
 
@@ -38,7 +44,13 @@ def main(argv=None) -> int:
         mod = suites[name]
         print(f"\n=== {name} ===")
         t0 = time.time()
-        rows = mod.main()
+        if profile:
+            if "profile" not in inspect.signature(mod.main).parameters:
+                print(f"({name}: no --profile support, skipped)")
+                continue
+            rows = mod.main(profile=True)
+        else:
+            rows = mod.main()
         dt = time.time() - t0
         print(f"({name}: {dt:.1f}s)")
         if rows and not isinstance(rows, int):

@@ -40,7 +40,8 @@ from ..ir import UNKNOWN_LOC
 from .rtl import (Binop, CombAssign, Const, Expr, Instance, Item,
                   LoopController, MemRead, Memory, MemWrite, Mux, Net,
                   PortConflictAssert, Ref, RegAssign, Repeat, RTLDesign,
-                  RTLModule, ShiftReg, Signed, Unop, zeros)
+                  RTLModule, ShiftReg, Signed, Unop,
+                  _ensure_recursion_headroom, zeros)
 
 # ---------------------------------------------------------------------------
 # Reserved-word tables (shared with core.codegen.lint's dialect rule sets)
@@ -242,6 +243,7 @@ class NetlistPrinter:
     def print_module(self, m: RTLModule,
                      modmap: Optional[dict[str, str]] = None,
                      design: Optional[RTLDesign] = None) -> str:
+        _ensure_recursion_headroom()
         self.m = m
         self._design = design
         if modmap is not None:

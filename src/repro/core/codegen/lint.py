@@ -414,8 +414,6 @@ def _iter_gallery_rtl(backend: str = "verilog"
                       ) -> Iterable[tuple[str, str, str, Sequence[str]]]:
     """(kernel, mode, concatenated text, module names) for every gallery
     kernel in both emission modes, emitted by ``backend``."""
-    from copy import deepcopy
-
     from ..gallery import GALLERY
     from ..passes import DEFAULT_PIPELINE_SPEC, PassManager
     from .verilog import generate_verilog
@@ -424,7 +422,7 @@ def _iter_gallery_rtl(backend: str = "verilog"
         module, entry = gal.build()
         PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(module)
         for mode in ("inline", "modules"):
-            mods = generate_verilog(deepcopy(module), entry, hierarchy=mode,
+            mods = generate_verilog(module.clone(), entry, hierarchy=mode,
                                     backend=backend)
             text = "\n".join(vm.text for vm in mods.values())
             yield name, mode, text, list(mods)

@@ -32,6 +32,7 @@ The module also hosts the RTL pass pipeline, registered on the same
 
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 from typing import Any, Iterable, Iterator, Optional, Union
 
@@ -44,17 +45,125 @@ from ..passmgr import (AnalysisManager, FunctionAnalysis, Pass,
 # ---------------------------------------------------------------------------
 
 
+#: Global intern table: flat structural tuple -> small int.  Structurally
+#: identical expression trees — across modules and designs — map to the same
+#: integer, so ``key()`` equality is O(1) and keys hash as plain ints in the
+#: sharing passes' dictionaries.  Bounded per compilation:
+#: ``clear_key_intern`` releases it (``generate_verilog`` does so before
+#: each lowering), and because ids are allocated from the monotonic
+#: ``_key_ids`` counter — never from the table size — a stale key cached on
+#: a node from before a clear can never alias a freshly interned structure;
+#: the only effect of clearing is that sharing is not detected *across* the
+#: clear boundary.
+_KEY_TABLE: dict[tuple, int] = {}
+_key_ids = itertools.count()
+
+
+def clear_key_intern() -> int:
+    """Drop the intern table (memory bound for long-lived processes).
+    Returns the number of released entries.  Safe at any point — see the
+    monotonic-id note on ``_KEY_TABLE``."""
+    n = len(_KEY_TABLE)
+    _KEY_TABLE.clear()
+    return n
+
+#: Counters for the hash-consing contract: ``computed`` increments once per
+#: node whose structural key is actually derived (the seed recursive path);
+#: ``hits`` counts cached O(1) returns.  ``tests/core/test_perf_infra.py``
+#: asserts no pass recomputes keys per item.
+KEY_STATS = {"computed": 0, "hits": 0}
+
+
+def reset_key_stats() -> None:
+    KEY_STATS["computed"] = 0
+    KEY_STATS["hits"] = 0
+
+
+def _ensure_recursion_headroom(limit: int = 20_000) -> None:
+    """Deep expression trees (e.g. the drain-phase bus mux of a 32x32-PE gemm
+    is a ~1024-deep ``Mux`` chain) exceed CPython's default recursion limit
+    in ``refs()``/``map_refs``/the printers; raise it once, generously."""
+    import sys
+
+    if sys.getrecursionlimit() < limit:
+        sys.setrecursionlimit(limit)
+
+
 class Expr:
     """Base class of RTL expressions.  Expressions are immutable trees over
     net *names* (``Ref``) and literals; ``refs()`` yields referenced nets and
-    ``key()`` is a structural identity used by CSE-style sharing."""
+    ``key()`` is a structural identity used by CSE-style sharing.
 
-    __slots__ = ()
+    **Hash-consing invariant** — expression nodes are immutable once
+    constructed; every rewrite builds new nodes (``map_refs`` is
+    copy-on-write).  ``key()`` is therefore computed at most once per node
+    and *interned*: structurally identical trees return the same small
+    integer, so key equality/hashing is O(1) instead of O(tree).  Anyone
+    adding a new ``Expr`` kind must implement ``_key_parts`` (flat tuple
+    over child ``key()`` ints), ``structural_key`` (the uncached recursive
+    form, kept for tests/debugging) and ``_children``, and must never mutate
+    a node after construction."""
+
+    __slots__ = ("_key",)
 
     def refs(self) -> Iterator[str]:
-        return iter(())
+        """Referenced net names, in source order.  Iterative: a chain of
+        nested ``yield from`` generators costs O(depth) per yielded leaf
+        (O(size^2) on the deep bus-mux chains of large designs); the
+        explicit stack keeps a full traversal O(size)."""
+        stack = [self]
+        while stack:
+            e = stack.pop()
+            if isinstance(e, Ref):
+                yield e.name
+                continue
+            cs = e._children()
+            if cs:
+                stack.extend(reversed(cs))
 
-    def key(self) -> tuple:
+    def key(self) -> int:
+        """Interned structural identity (small int), cached per node."""
+        try:
+            k = self._key
+        except AttributeError:
+            pass
+        else:
+            KEY_STATS["hits"] += 1
+            return k
+        # iterative post-order over the uncached subtree: immune to deep
+        # chains and O(nodes) total even on first touch
+        stack = [self]
+        table = _KEY_TABLE
+        while stack:
+            node = stack[-1]
+            if hasattr(node, "_key"):
+                stack.pop()
+                continue
+            pending = [c for c in node._children() if not hasattr(c, "_key")]
+            if pending:
+                stack.extend(pending)
+                continue
+            KEY_STATS["computed"] += 1
+            parts = node._key_parts()
+            k = table.get(parts)
+            if k is None:
+                k = table[parts] = next(_key_ids)
+            node._key = k
+            stack.pop()
+        return self._key
+
+    def _children(self) -> tuple:
+        return ()
+
+    def _key_parts(self) -> tuple:
+        """Flat structural tuple over child ``key()`` ints (children must be
+        keyed already — ``key()`` guarantees post-order)."""
+        raise NotImplementedError
+
+    def structural_key(self) -> tuple:
+        """The seed-path fully-recursive structural key (uncached nested
+        tuples).  Production code uses the interned ``key()``; this form is
+        retained for the hash-consing property tests."""
         raise NotImplementedError
 
     def map_refs(self, ren: dict[str, str]) -> "Expr":
@@ -74,7 +183,10 @@ class Const(Expr):
         self.width = width
         self.signed = signed
 
-    def key(self) -> tuple:
+    def _key_parts(self) -> tuple:
+        return ("c", self.value, self.width, self.signed)
+
+    def structural_key(self) -> tuple:
         return ("c", self.value, self.width, self.signed)
 
     def __str__(self) -> str:
@@ -98,7 +210,10 @@ class Ref(Expr):
     def refs(self) -> Iterator[str]:
         yield self.name
 
-    def key(self) -> tuple:
+    def _key_parts(self) -> tuple:
+        return ("r", self.name)
+
+    def structural_key(self) -> tuple:
         return ("r", self.name)
 
     def map_refs(self, ren: dict[str, str]) -> "Expr":
@@ -116,11 +231,14 @@ class Signed(Expr):
     def __init__(self, a: Expr):
         self.a = a
 
-    def refs(self) -> Iterator[str]:
-        return self.a.refs()
+    def _children(self) -> tuple:
+        return (self.a,)
 
-    def key(self) -> tuple:
+    def _key_parts(self) -> tuple:
         return ("s", self.a.key())
+
+    def structural_key(self) -> tuple:
+        return ("s", self.a.structural_key())
 
     def map_refs(self, ren: dict[str, str]) -> "Expr":
         a = self.a.map_refs(ren)
@@ -138,11 +256,14 @@ class Unop(Expr):
         self.a = a
         self.width = width  # cost width (resource model)
 
-    def refs(self) -> Iterator[str]:
-        return self.a.refs()
+    def _children(self) -> tuple:
+        return (self.a,)
 
-    def key(self) -> tuple:
+    def _key_parts(self) -> tuple:
         return ("u", self.op, self.a.key())
+
+    def structural_key(self) -> tuple:
+        return ("u", self.op, self.a.structural_key())
 
     def map_refs(self, ren: dict[str, str]) -> "Expr":
         a = self.a.map_refs(ren)
@@ -170,12 +291,14 @@ class Binop(Expr):
         self.impl = impl
         self.free = free
 
-    def refs(self) -> Iterator[str]:
-        yield from self.a.refs()
-        yield from self.b.refs()
+    def _children(self) -> tuple:
+        return (self.a, self.b)
 
-    def key(self) -> tuple:
+    def _key_parts(self) -> tuple:
         return ("b", self.op, self.a.key(), self.b.key())
+
+    def structural_key(self) -> tuple:
+        return ("b", self.op, self.a.structural_key(), self.b.structural_key())
 
     def map_refs(self, ren: dict[str, str]) -> "Expr":
         a, b = self.a.map_refs(ren), self.b.map_refs(ren)
@@ -198,13 +321,15 @@ class Mux(Expr):
         self.b = b
         self.width = width
 
-    def refs(self) -> Iterator[str]:
-        yield from self.cond.refs()
-        yield from self.a.refs()
-        yield from self.b.refs()
+    def _children(self) -> tuple:
+        return (self.cond, self.a, self.b)
 
-    def key(self) -> tuple:
+    def _key_parts(self) -> tuple:
         return ("m", self.cond.key(), self.a.key(), self.b.key())
+
+    def structural_key(self) -> tuple:
+        return ("m", self.cond.structural_key(), self.a.structural_key(),
+                self.b.structural_key())
 
     def map_refs(self, ren: dict[str, str]) -> "Expr":
         c, a, b = (self.cond.map_refs(ren), self.a.map_refs(ren),
@@ -226,11 +351,14 @@ class Repeat(Expr):
         self.n = n
         self.a = a
 
-    def refs(self) -> Iterator[str]:
-        return self.a.refs()
+    def _children(self) -> tuple:
+        return (self.a,)
 
-    def key(self) -> tuple:
+    def _key_parts(self) -> tuple:
         return ("rep", self.n, self.a.key())
+
+    def structural_key(self) -> tuple:
+        return ("rep", self.n, self.a.structural_key())
 
     def map_refs(self, ren: dict[str, str]) -> "Expr":
         a = self.a.map_refs(ren)
@@ -245,11 +373,15 @@ def zeros(width: int) -> Expr:
 
 
 def walk_expr(e: Expr) -> Iterator[Expr]:
-    yield e
-    for attr in ("a", "b", "cond"):
-        sub = getattr(e, attr, None)
-        if isinstance(sub, Expr):
-            yield from walk_expr(sub)
+    """Preorder walk (node before subtrees, ``a``/``b``/``cond`` attribute
+    order — the historical ordering ``netlist_of`` depends on).  Iterative
+    for the same O(size) reason as ``Expr.refs``."""
+    stack = [e]
+    while stack:
+        cur = stack.pop()
+        yield cur
+        subs = [getattr(cur, attr, None) for attr in ("a", "b", "cond")]
+        stack.extend(s for s in reversed(subs) if isinstance(s, Expr))
 
 
 # ---------------------------------------------------------------------------
@@ -764,11 +896,66 @@ class NetFanoutAnalysis(FunctionAnalysis):
 # ---------------------------------------------------------------------------
 
 
+class NetReaderIndex:
+    """Per-run reader index: net name -> set of items whose ``reads()``
+    include it.  ``replace(old, new)`` applies one rename in O(#readers of
+    old) instead of ``RTLModule.replace_net``'s O(items x expr-size) full
+    scan — the asymptotic fix that makes the sharing passes linear.  The
+    index is keyed on item *objects*, so ``drop_items`` compaction never
+    invalidates it (renaming an already-dropped item is a harmless no-op,
+    exactly like the full-scan path before compaction)."""
+
+    __slots__ = ("readers",)
+
+    def __init__(self, m: RTLModule):
+        readers: dict[str, set[Item]] = {}
+        for it in m.items:
+            for r in it.reads():
+                s = readers.get(r)
+                if s is None:
+                    s = readers[r] = set()
+                s.add(it)
+        self.readers = readers
+
+    def replace(self, old: str, new: str) -> int:
+        """Rewrite every read of ``old`` into ``new`` and migrate the index
+        entries.  Returns the number of items touched."""
+        its = self.readers.pop(old, None)
+        if not its:
+            return 0
+        ren = {old: new}
+        for it in its:
+            it.map_refs(ren)
+        tgt = self.readers.get(new)
+        if tgt is None:
+            self.readers[new] = its
+        else:
+            tgt.update(its)
+        return len(its)
+
+    def note_reads(self, it: Item, names: Iterable[str]) -> None:
+        """Register reads added by an in-place item mutation done outside
+        ``replace`` (stale entries for removed reads are harmless)."""
+        for nm in names:
+            self.readers.setdefault(nm, set()).add(it)
+
+
 class RTLPass(Pass):
     """Base of passes running over an ``RTLDesign`` (or a plain dict of
-    RTLModules).  Subclasses implement ``run_module``."""
+    RTLModules).  Subclasses implement ``run_module``.
+
+    RTL passes only touch ``RTLModule`` netlists, never HIR functions, so
+    every HIR-level analysis cached on a shared ``AnalysisManager`` stays
+    valid across them (``preserves``).  ``net-fanout`` is also declared
+    preserved *globally* because each pass already invalidates it per
+    mutated module (``am.invalidate(func=m)``) — modules the pass did not
+    change keep their cached fan-out."""
+
+    preserves = ("loop-info", "port-accesses", "mem-touch", "dependence",
+                 "net-fanout")
 
     def run(self, design) -> int:
+        _ensure_recursion_headroom()
         mods = design.modules if isinstance(design, RTLDesign) else dict(design)
         n = 0
         for m in mods.values():
@@ -881,30 +1068,34 @@ class ShiftRegMerge(RTLPass):
     name = "rtl-merge-srl"
 
     def run_module(self, m: RTLModule) -> int:
-        groups: dict[tuple, list[ShiftReg]] = {}
+        groups: dict[tuple, list[tuple[int, ShiftReg]]] = {}
         multi_written = self._multi_written(m)
-        for it in m.items:
+        for i, it in enumerate(m.items):
             if isinstance(it, ShiftReg) and it.dest not in multi_written:
                 key = (it.src.key(), it.width, it.reset_zero)
-                groups.setdefault(key, []).append(it)
+                groups.setdefault(key, []).append((i, it))
+        if not any(len(c) > 1 for c in groups.values()):
+            return 0
+        idx = NetReaderIndex(m)
         n = 0
         drop: set[int] = set()
         for chain in groups.values():
             if len(chain) < 2:
                 continue
-            chain.sort(key=lambda s: s.depth)
-            kept = chain[0]
+            chain.sort(key=lambda s: s[1].depth)
+            kept = chain[0][1]
             kept_total = kept.depth  # cumulative delay of kept.dest from the source
-            for dup in chain[1:]:
+            for di, dup in chain[1:]:
                 total = dup.depth
                 if total == kept_total:
-                    m.replace_net(dup.dest, kept.dest)
-                    drop.add(m.items.index(dup))
+                    idx.replace(dup.dest, kept.dest)
+                    drop.add(di)
                     m.nets.pop(dup.dest, None)
                 else:
                     # re-tap: source the deeper chain from the current tail,
                     # keeping only the residual depth beyond it
                     dup.src = Ref(kept.dest)
+                    idx.note_reads(dup, (kept.dest,))
                     dup.depth = total - kept_total
                     kept, kept_total = dup, total
                 n += 1
@@ -937,10 +1128,11 @@ class CombShare(RTLPass):
 
     def run_module(self, m: RTLModule) -> int:
         n = 0
+        idx: Optional[NetReaderIndex] = None  # built on the first rewrite
         changed = True
         while changed:  # sharing can make further items structurally equal
             changed = False
-            seen: dict[tuple, CombAssign] = {}
+            seen: dict[int, CombAssign] = {}
             ports = m.port_names()
             drop: set[int] = set()
             for i, it in enumerate(m.items):
@@ -953,10 +1145,13 @@ class CombShare(RTLPass):
                     continue
                 if isinstance(it.expr, Ref) or it.dest == first.dest:
                     continue  # plain aliases gain nothing
+                if idx is None:
+                    idx = NetReaderIndex(m)
                 if it.dest in ports:
                     it.expr = Ref(first.dest)
+                    idx.note_reads(it, (first.dest,))
                 else:
-                    m.replace_net(it.dest, first.dest)
+                    idx.replace(it.dest, first.dest)
                     m.nets.pop(it.dest, None)
                     drop.add(i)
                 n += 1
@@ -985,6 +1180,7 @@ class ControllerMerge(RTLPass):
         groups: dict[tuple, LoopController] = {}
         n = 0
         drop: set[int] = set()
+        idx: Optional[NetReaderIndex] = None  # built on the first merge
         for i, it in enumerate(m.items):
             if not isinstance(it, LoopController):
                 continue
@@ -995,15 +1191,17 @@ class ControllerMerge(RTLPass):
             if kept is None:
                 groups[key] = it
                 continue
+            if idx is None:
+                idx = NetReaderIndex(m)
             if it.endp and not kept.endp:
                 kept.endp = it.endp  # keep driving the consumed pulse
             else:
                 for old, new in (((it.endp, kept.endp),) if it.endp else ()):
-                    m.replace_net(old, new)
+                    idx.replace(old, new)
                     m.nets.pop(old, None)
             for old, new in ((it.iv, kept.iv), (it.iter_net, kept.iter_net),
                              (it.active, kept.active)):
-                m.replace_net(old, new)
+                idx.replace(old, new)
                 m.nets.pop(old, None)
             if it.iicnt:
                 m.nets.pop(it.iicnt, None)
@@ -1030,6 +1228,7 @@ class MemReadShare(RTLPass):
         seen: dict[tuple, MemRead] = {}
         n = 0
         drop: set[int] = set()
+        idx: Optional[NetReaderIndex] = None  # built on the first share
         for i, it in enumerate(m.items):
             if not isinstance(it, MemRead):
                 continue
@@ -1038,7 +1237,9 @@ class MemReadShare(RTLPass):
             if kept is None:
                 seen[key] = it
                 continue
-            m.replace_net(it.dest, kept.dest)
+            if idx is None:
+                idx = NetReaderIndex(m)
+            idx.replace(it.dest, kept.dest)
             m.nets.pop(it.dest, None)
             drop.add(i)
             n += 1

@@ -272,8 +272,11 @@ def register_pass(cls: Type[Pass]) -> Type[Pass]:
 
 def _ensure_registry_populated() -> None:
     # Pass classes live next to their implementations; importing the passes
-    # package registers all of them (lazy to avoid an import cycle).
-    if not PASS_REGISTRY:
+    # package registers all of them (lazy to avoid an import cycle).  Keyed
+    # on a known HIR pass, not registry emptiness: the RTL passes register
+    # themselves when core.codegen.rtl is imported first, and a non-empty
+    # registry must not mask the still-unloaded HIR passes.
+    if "canonicalize" not in PASS_REGISTRY:
         from . import passes  # noqa: F401
 
 

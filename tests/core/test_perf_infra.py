@@ -1,0 +1,269 @@
+"""Tests for the compile-time performance infrastructure: hash-consed /
+interned ``Expr.key()`` (equivalence with the seed recursive computation, no
+aliasing of distinct structures, no per-item recomputation inside the RTL
+passes) and the fast ``Module.clone()`` (printed-IR round-trip, disjoint
+object graphs, intact use-def chains, codegen equivalence).
+
+Perf-assert tests are skippable on slow/contended runners via
+``REPRO_SKIP_PERF=1``."""
+
+import os
+import time
+
+import pytest
+
+from repro.core.codegen import rtl
+from repro.core.codegen.rtl import (RTL_PIPELINE_SPEC, Binop, CombAssign,
+                                    CombShare, Const, Mux, Ref, Repeat,
+                                    RTLDesign, RTLModule, Signed, Unop,
+                                    walk_expr)
+from repro.core.codegen.verilog import generate_verilog
+from repro.core.gallery import GALLERY
+from repro.core.passmgr import (DEFAULT_PIPELINE_SPEC, AnalysisManager,
+                                PassManager)
+from repro.core.printer import print_module
+from repro.core import verifier
+
+SKIP_PERF = pytest.mark.skipif(
+    os.environ.get("REPRO_SKIP_PERF") == "1",
+    reason="perf asserts disabled on slow runners (REPRO_SKIP_PERF=1)")
+
+
+# ---------------------------------------------------------------------------
+# hash-consed Expr.key() — property tests (hypothesis optional, like
+# test_roundtrip/test_backend_properties; the deterministic tests below run
+# regardless)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _names = st.sampled_from(["a", "b", "c", "d"])
+    _leaf = st.one_of(
+        st.builds(Ref, _names),
+        st.builds(Const, st.integers(0, 7), st.sampled_from([None, 4, 8]),
+                  st.booleans()),
+    )
+    _exprs = st.recursive(
+        _leaf,
+        lambda ch: st.one_of(
+            st.builds(Signed, ch),
+            st.builds(lambda a: Unop("~", a), ch),
+            st.builds(lambda op, a, b: Binop(op, a, b),
+                      st.sampled_from(["+", "-", "&", "|", "=="]), ch, ch),
+            st.builds(lambda c, a, b: Mux(c, a, b), ch, ch, ch),
+            st.builds(lambda n, a: Repeat(n, a), st.integers(1, 4), ch),
+        ),
+        max_leaves=16,
+    )
+
+    @given(_exprs, _exprs)
+    @settings(max_examples=200, deadline=None)
+    def test_interned_key_matches_seed_recursive_computation(e1, e2):
+        """key() equality must coincide exactly with the seed-path recursive
+        structural key: equal structures share one interned key, and
+        interning never aliases structurally distinct nodes."""
+        same_structural = e1.structural_key() == e2.structural_key()
+        same_interned = e1.key() == e2.key()
+        assert same_interned == same_structural
+
+    @given(_exprs)
+    @settings(max_examples=100, deadline=None)
+    def test_key_is_cached_and_deterministic(e):
+        k1 = e.key()
+        assert e.key() == k1  # cached value stable
+
+    @given(_exprs, st.sampled_from(["a", "b"]), st.sampled_from(["x", "y"]))
+    @settings(max_examples=100, deadline=None)
+    def test_map_refs_copy_on_write_keeps_keys_consistent(e, old, new):
+        """Renaming through ``map_refs`` builds new nodes; the original
+        node's cached key must be unchanged, and the renamed tree's key must
+        discriminate exactly like its structural key."""
+        k_before = e.key()
+        renamed = e.map_refs({old: new})
+        assert e.key() == k_before
+        assert (renamed.key() == e.key()) == (
+            renamed.structural_key() == e.structural_key())
+
+
+def test_interned_key_equivalence_deterministic():
+    """No-hypothesis fallback of the equivalence property on hand-built
+    trees: equal structures share a key, distinct structures never alias."""
+    mk = lambda nm, c: Binop("+", Signed(Ref(nm)), Mux(Ref("p"), Const(c, 8),
+                                                       Repeat(2, Ref(nm))))
+    a1, a2 = mk("a", 3), mk("a", 3)
+    b1, b2 = mk("b", 3), mk("a", 4)
+    assert a1.key() == a2.key()
+    assert a1.structural_key() == a2.structural_key()
+    for other in (b1, b2):
+        assert a1.key() != other.key()
+        assert a1.structural_key() != other.structural_key()
+
+
+def _count_nodes(m: RTLModule) -> int:
+    return sum(1 for it in m.items for e in it.exprs() for _ in walk_expr(e))
+
+
+def test_comb_share_computes_each_key_at_most_once():
+    """The counting test for the acceptance criterion: one CombShare run
+    over a module derives the seed-path structural key at most once per
+    expression node that ever existed (pre-existing nodes + the Refs the
+    pass itself creates)."""
+    m = RTLModule("t")
+    for p in ("clk", "rst", "t_start"):
+        m.add_port(p, "input")
+    m.add_port("o", "output", 8)
+    for i in range(20):
+        m.new_net(f"n{i}", 8)
+        # ten duplicated pairs: n0/n1 share, n2/n3 share, ...
+        expr = Binop("+", Ref("o"), Const(i // 2, 8), width=8)
+        m.add(CombAssign(f"n{i}", expr))
+    nodes_before = _count_nodes(m)
+    rtl.reset_key_stats()
+    rewrites = CombShare().run_module(m)
+    assert rewrites > 0
+    assert rtl.KEY_STATS["computed"] <= nodes_before + rewrites, (
+        "sharing pass recomputed structural keys per item")
+
+
+def test_clear_key_intern_is_sound():
+    """Clearing the intern table (the per-compilation memory bound) may
+    miss sharing across the boundary but must never alias: ids are
+    monotonic, so a stale cached key never equals a fresh one."""
+    e1 = Binop("+", Ref("a"), Const(1, 8))
+    k1 = e1.key()
+    released = rtl.clear_key_intern()
+    assert released >= 1
+    twin = Binop("+", Ref("a"), Const(1, 8))
+    other = Binop("-", Ref("a"), Const(1, 8))
+    assert twin.key() != k1        # cross-boundary sharing missed, not wrong
+    assert other.key() != k1
+    assert other.key() != twin.key()
+    assert e1.key() == k1          # cached key survives the clear
+
+
+def test_rtl_pipeline_at_fixpoint_recomputes_no_keys():
+    """After one full RTL pipeline run the netlist is at a fixpoint; a
+    second run must be 100% key-cache hits — no pass re-derives structural
+    identity node by node."""
+    m, entry = GALLERY["gemm"].build(n=4)
+    mods = generate_verilog(m, entry)
+    design = RTLDesign({n: vm.rtl for n, vm in mods.items()})
+    rtl.reset_key_stats()
+    PassManager.from_spec(RTL_PIPELINE_SPEC).run(design)
+    assert rtl.KEY_STATS["computed"] == 0
+    assert rtl.KEY_STATS["hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Module.clone()
+# ---------------------------------------------------------------------------
+
+
+def _all_values(module):
+    out = []
+    for f in module.funcs.values():
+        stack = [f]
+        while stack:
+            op = stack.pop()
+            out.extend(op.results)
+            for r in op.regions:
+                out.extend(r.args)
+                stack.extend(r.ops)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(GALLERY))
+def test_clone_round_trips_printed_ir(name):
+    m, _entry = GALLERY[name].build()
+    c = m.clone()
+    assert print_module(c) == print_module(m)
+
+
+@pytest.mark.parametrize("name", ["gemm", "conv2d", "stencil1d"])
+def test_clone_graph_is_disjoint(name):
+    m, _entry = GALLERY[name].build()
+    c = m.clone()
+    orig_ops = {id(op) for op in m.walk()}
+    clone_ops = {id(op) for op in c.walk()}
+    assert not orig_ops & clone_ops
+    orig_vals = {id(v) for v in _all_values(m)}
+    clone_vals = {id(v) for v in _all_values(c)}
+    assert not orig_vals & clone_vals
+    # every operand of the clone resolves inside the clone's own value set
+    for op in c.walk():
+        for o in op.operands:
+            assert id(o) in clone_vals
+
+
+@pytest.mark.parametrize("name", ["gemm", "stencil1d"])
+def test_clone_use_def_chains_intact(name):
+    m, _entry = GALLERY[name].build()
+    c = m.clone()
+    for op in c.walk():
+        for v in op.operands:
+            assert op in v._use_ops
+        for r in op.results:
+            for user, count in r._use_ops.items():
+                slots = sum(1 for o in user.operands if o is r)
+                assert slots == count
+
+
+def test_clone_isolates_mutation():
+    m, entry = GALLERY["stencil1d"].build()
+    c = m.clone()
+    before = print_module(c)
+    # mutate the original aggressively: run the whole optimization pipeline
+    PassManager.from_spec(DEFAULT_PIPELINE_SPEC).run(m)
+    assert print_module(c) == before
+
+
+def test_clone_codegen_equivalent():
+    m, entry = GALLERY["stencil1d"].build()
+    texts_orig = {n: vm.text
+                  for n, vm in generate_verilog(m.clone(), entry).items()}
+    texts_clone = {n: vm.text
+                   for n, vm in generate_verilog(m.clone(), entry).items()}
+    assert texts_orig == texts_clone
+
+
+def test_clone_preserves_schedules_and_verifies():
+    m, _entry = GALLERY["gemm"].build(n=4)
+    c = m.clone()
+    verifier.verify(c)  # strict: schedules, births and windows all intact
+
+
+# ---------------------------------------------------------------------------
+# perf smoke (skippable)
+# ---------------------------------------------------------------------------
+
+
+@SKIP_PERF
+def test_full_pipeline_smoke_budget():
+    """Generous end-to-end wall budget on a mid-size config (measured ~0.04s
+    after the hash-consing overhaul; budget leaves 100x headroom)."""
+    m, entry = GALLERY["gemm"].build(n=8)
+    am = AnalysisManager()
+    t0 = time.perf_counter()
+    verifier.verify(m, am=am)
+    PassManager.from_spec(DEFAULT_PIPELINE_SPEC, analysis_manager=am).run(m)
+    generate_verilog(m, entry, am=am)
+    assert time.perf_counter() - t0 < 5.0
+
+
+@SKIP_PERF
+def test_clone_is_not_slower_than_deepcopy():
+    from copy import deepcopy
+
+    m, _entry = GALLERY["gemm"].build(n=8)
+    t0 = time.perf_counter()
+    deepcopy(m)
+    t_deep = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    m.clone()
+    t_clone = time.perf_counter() - t0
+    assert t_clone <= t_deep * 2  # in practice ~20x faster; 2x guards noise
