@@ -204,15 +204,16 @@ def fit_exponent(sizes: list[int], times: list[float]) -> float | None:
 
 
 #: Largest unrolled op count at which the HLS schedule *search* is timed.
-#: The search is the superlinear side of the Table 6 comparison (gemm n=16
-#: already takes ~70 s), so beyond this cap the harness records
-#: ``hls_search_s: None`` + ``search_capped: true`` instead of stalling the
-#: sweep — the gap is fitted from the sizes below the cap.
-SEARCH_CAP_OPS = 2000
+#: ``None`` = uncapped (the default): the MII-bounded gallop/binary search
+#: with incremental relaxation made the search near-linear in design size,
+#: so even the 32x32-PE gemm completes in seconds where the seed's linear
+#: scan took ~70 s at n=16.  ``--search-cap N`` restores a cap for very
+#: constrained environments.
+SEARCH_CAP_OPS = None
 
 
 def bench_config(build, reps: int = 1, emit_backend: str = "verilog",
-                 search_cap_ops: int = SEARCH_CAP_OPS) -> dict:
+                 search_cap_ops: int | None = SEARCH_CAP_OPS) -> dict:
     """One sweep point: build, then time verification, the HLS schedule
     search, and every phase of the end-to-end compile pipeline.  All clones
     happen outside the timed sections; the GC is collected and frozen first
@@ -231,7 +232,7 @@ def bench_config(build, reps: int = 1, emit_backend: str = "verilog",
 
 
 def _bench_config_inner(base, entry, reps: int, emit_backend: str,
-                        search_cap_ops: int) -> dict:
+                        search_cap_ops: int | None) -> dict:
     # Table 6 mechanism on the *unrolled* design, as in the seed benchmark
     # (op count grows with the sweep, so the verify-vs-search gap widening
     # with scale is actually observable): verify an explicit schedule vs
@@ -241,7 +242,7 @@ def _bench_config_inner(base, entry, reps: int, emit_backend: str,
     unrolled_count = sum(1 for _ in unrolled.get(entry).body.walk())
     clones = [unrolled.clone() for _ in range(reps)]
     t_verify = min(_time(lambda m=m: verifier.verify(m)) for m in clones)
-    if unrolled_count <= search_cap_ops:
+    if search_cap_ops is None or unrolled_count <= search_cap_ops:
         erased = [erase_schedule(unrolled.clone()) for _ in range(reps)]
         t_search = min(_time(lambda m=m: hls_schedule(m)) for m in erased)
     else:
@@ -295,7 +296,8 @@ def _bench_config_inner(base, entry, reps: int, emit_backend: str,
 def run(gemm_sizes=(2, 4, 8, 16, 24, 32),
         conv2d_lanes=(1, 2, 4, 8),
         stencil_lanes=(1, 4, 16, 32),
-        reps: int = 1) -> list[dict]:
+        reps: int = 1,
+        search_cap_ops: int | None = SEARCH_CAP_OPS) -> list[dict]:
     sweeps = [("gemm", n, lambda n=n: gemm.build(n=n)) for n in gemm_sizes]
     sweeps += [("conv2d", u, lambda u=u: build_conv2d_lanes(lanes=u))
                for u in conv2d_lanes]
@@ -303,7 +305,9 @@ def run(gemm_sizes=(2, 4, 8, 16, 24, 32),
                for u in stencil_lanes]
     rows = []
     for kernel, size, build in sweeps:
-        row = {"kernel": kernel, "size": size, **bench_config(build, reps=reps)}
+        row = {"kernel": kernel, "size": size,
+               **bench_config(build, reps=reps,
+                              search_cap_ops=search_cap_ops)}
         rows.append(row)
     return rows
 
@@ -331,14 +335,16 @@ def fit_rows(rows: list[dict]) -> dict:
                if r["hls_search_s"] is not None]
         e = fit_exponent([s for s, _ in pts], [t for _, t in pts])
         kf["hls_search"] = round(e, 2) if e is not None else None
+        kf["search"] = kf["hls_search"]
         fits[kernel] = kf
     return fits
 
 
 def main(json_out: bool = False, gemm_sizes=None, reps: int = 1,
-         budget_s: float | None = None, artifact: bool = True):
+         budget_s: float | None = None, artifact: bool = True,
+         search_cap_ops: int | None = SEARCH_CAP_OPS):
     rows = run(gemm_sizes=tuple(gemm_sizes) if gemm_sizes else (2, 4, 8, 16, 24, 32),
-               reps=reps)
+               reps=reps, search_cap_ops=search_cap_ops)
     fits = fit_rows(rows)
     payload = {"rows": rows, "fits": fits,
                "phases": list(PIPELINE_PHASES)}
@@ -390,8 +396,12 @@ if __name__ == "__main__":
                          "wall-clock budget (CI perf smoke)")
     ap.add_argument("--no-artifact", action="store_true",
                     help="skip writing artifacts/bench/BENCH_codegen_scaling.json")
+    ap.add_argument("--search-cap", type=int, default=None,
+                    help="skip timing the HLS schedule search above this "
+                         "unrolled op count (default: uncapped)")
     args = ap.parse_args()
     sizes = ([int(s) for s in args.gemm_sizes.split(",")]
              if args.gemm_sizes else None)
     main(json_out=args.json, gemm_sizes=sizes, reps=args.reps,
-         budget_s=args.budget_s, artifact=not args.no_artifact)
+         budget_s=args.budget_s, artifact=not args.no_artifact,
+         search_cap_ops=args.search_cap)

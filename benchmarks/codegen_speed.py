@@ -20,7 +20,10 @@ verify+optimize flow — ``hits`` > 0 shows analyses being reused across the
 default pipeline instead of re-derived per consumer).  ``backend_emit_s``
 times each netlist printer (verilog / systemverilog / vhdl / circt) over the
 same optimized RTL design — pure printing cost, since every backend is a
-printer over the shared structure.  ``--json`` (or ``main(json_out=True)``)
+printer over the shared structure.  ``search_cache`` reports the HLS
+schedule-search memoization layer next to ``analysis_cache``: cold vs warm
+``hls_compile`` wall time through the fingerprint-keyed compile cache plus
+its hit/miss counters.  ``--json`` (or ``main(json_out=True)``)
 emits the rows as JSON; ``--kernels a,b`` and ``--reps N`` bound the run
 (the CI smoke step uses a single small kernel).
 """
@@ -39,8 +42,9 @@ from repro.core.codegen import BACKENDS, get_printer
 from repro.core.codegen.rtl import RTLDesign
 from repro.core.codegen.verilog import generate_verilog
 from repro.core.gallery import GALLERY, PAPER_BENCHMARKS
+from repro.core.hls import dse as hls_dse
 from repro.core.hls.eraser import erase_schedule
-from repro.core.hls.scheduler import hls_schedule
+from repro.core.hls.scheduler import hls_compile, hls_schedule
 from repro.core.passes import (AnalysisManager, DEFAULT_PIPELINE_SPEC,
                                RTL_PIPELINE_SPEC, PassManager)
 from repro.core.passes.legacy_sweep import run_legacy_sweep
@@ -133,6 +137,30 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
 
         t_hir = _time(hir_pipeline, reps)
         t_hls = _time(hls_pipeline, reps)
+
+        # search-cache columns: cold vs warm ``hls_compile`` through the
+        # fingerprint-keyed compile cache (warm repeat of a structurally
+        # identical module is a cache hit), reported next to the analysis
+        # cache so both memoization layers are visible per kernel.
+        erased = erase_schedule(base_module.clone())
+        hls_dse.COMPILE_CACHE.clear()
+        hls_dse.SCHEDULE_CACHE.clear()
+        mc = erased.clone()
+        t0 = time.perf_counter()
+        hls_compile(mc, entry=entry)
+        t_cold = time.perf_counter() - t0
+        mw = erased.clone()
+        t0 = time.perf_counter()
+        r_warm, _ = hls_compile(mw, entry=entry)
+        t_warm = time.perf_counter() - t0
+        search_cache = {
+            "cold_s": round(t_cold, 5),
+            "warm_s": round(t_warm, 5),
+            "warm_speedup": round(t_cold / t_warm, 1) if t_warm > 0 else None,
+            **r_warm.search_cache_stats(),
+            "schedule_cache": hls_dse.SCHEDULE_CACHE.stats_dict(),
+            "compile_cache": hls_dse.COMPILE_CACHE.stats_dict(),
+        }
         paper = PAPER_SECONDS.get(name, (None, None))
         rows.append({
             "kernel": name,
@@ -164,6 +192,8 @@ def run(bench_names=None, reps: int = 3) -> list[dict]:
             "backend_emit_s": backend_emit,
             # shared-analysis cache counters for the verify+optimize flow
             "analysis_cache": stats_am.stats_dict(),
+            # schedule-search memoization counters + cold/warm compile times
+            "search_cache": search_cache,
         })
     return rows
 
@@ -234,6 +264,15 @@ def main(json_out: bool = False, bench_names=None, reps: int = 3,
                         for k, v in ac["per_analysis"].items())
         print(f"  {r['kernel']:12s} computed={ac['computed']} hits={ac['hits']} "
               f"invalidated={ac['invalidated']}  [{per}]")
+    print("\nsearch cache (fingerprint-keyed hls_compile memoization):")
+    for r in rows:
+        sc = r["search_cache"]
+        spd = f"{sc['warm_speedup']:.1f}x" if sc["warm_speedup"] else "-"
+        print(f"  {r['kernel']:12s} cold={sc['cold_s'] * 1e3:.1f}ms "
+              f"warm={sc['warm_s'] * 1e3:.1f}ms ({spd})  "
+              f"hits={sc['hits']} misses={sc['misses']} "
+              f"compile_cache={sc['compile_cache']['hits']}h/"
+              f"{sc['compile_cache']['misses']}m")
     return rows
 
 

@@ -2,6 +2,7 @@
 report mandated by the assignment:
 
   codegen_speed    paper Table 6 (HIR vs HLS codegen time)
+  dse              Pareto-front design-space exploration (gemm, conv2d)
   resource_usage   paper Table 5 (LUT/FF/DSP/BRAM per kernel)
   precision_opt    paper Table 4 (precision-opt ablation)
   roofline         EXPERIMENTS §Roofline source (reads dry-run artifacts)
@@ -28,12 +29,13 @@ def main(argv=None) -> int:
     profile = "--profile" in argv
     if profile:
         argv = [a for a in argv if a != "--profile"]
-    from . import (codegen_scaling, codegen_speed, precision_opt,
+    from . import (codegen_scaling, codegen_speed, dse, precision_opt,
                    resource_usage, roofline)
 
     suites = {
         "codegen_speed": codegen_speed,
         "codegen_scaling": codegen_scaling,
+        "dse": dse,
         "resource_usage": resource_usage,
         "precision_opt": precision_opt,
         "roofline": roofline,

@@ -258,14 +258,24 @@ def storage_of(mem: Value):
 
 
 class MemTouches:
-    """Per-op memory-touch query with a cache for region summaries
-    (``ForOp`` touches are the union of their bodies').  Registered as the
-    ``mem-touch`` analysis; also usable standalone on unscheduled IR."""
+    """Per-op memory-touch query with a memo for every op (``ForOp`` touches
+    are the union of their bodies').  Registered as the ``mem-touch``
+    analysis; also usable standalone on unscheduled IR.  The memo matters:
+    the dependence builders query the same ops many times, and recomputing a
+    leaf ``Touch`` involves type/banking introspection per call."""
 
     def __init__(self):
-        self._loop_cache: dict[Operation, list[Touch]] = {}
+        self._cache: dict[Operation, list[Touch]] = {}
 
     def of(self, op: Operation) -> list[Touch]:
+        cached = self._cache.get(op)
+        if cached is not None:
+            return cached
+        out = self._compute(op)
+        self._cache[op] = out
+        return out
+
+    def _compute(self, op: Operation) -> list[Touch]:
         if op.opname in ("mem_read", "mem_write"):
             mem = op.operands[0] if op.opname == "mem_read" else op.operands[1]
             mt: MemrefType = mem.type  # type: ignore[assignment]
@@ -288,12 +298,9 @@ class MemTouches:
                     out.append(Touch(storage_of(v), True, frozenset(), frozenset(), frozenset()))
             return out
         if isinstance(op, ForOp):
-            if op in self._loop_cache:
-                return self._loop_cache[op]
             out = []
             for b in op.region(0).ops:
                 out.extend(self.of(b))
-            self._loop_cache[op] = out
             return out
         return []
 
@@ -314,6 +321,131 @@ class DepEdge(NamedTuple):
     distance: int
 
 
+def _tuples_conflict(a: tuple, b: tuple) -> bool:
+    """Inverse of ``Touch.distinct_bank`` on bare bank-const tuples: two
+    accesses conflict unless some distributed dim is constant on both sides
+    with different values."""
+    return not any(x is not None and y is not None and x != y
+                   for x, y in zip(a, b))
+
+
+class _BankGroup:
+    """Per (storage, exact bank-const tuple) serialization frontier."""
+
+    __slots__ = ("last_write", "reads")
+
+    def __init__(self):
+        self.last_write: Optional[Operation] = None
+        self.reads: list[Operation] = []
+
+
+class _StorageChain:
+    """Per-storage chained serialization state: the last non-plain toucher
+    (``barrier`` — a loop/call child conflicts with *every* access on the
+    storage) plus one :class:`_BankGroup` per exact bank-const tuple.  Fully
+    constant tuples conflict only with equal tuples (dict hit); tuples with
+    dynamic dims (``dyn``) must be checked pairwise."""
+
+    __slots__ = ("barrier", "groups", "dyn")
+
+    def __init__(self):
+        self.barrier: Optional[Operation] = None
+        self.groups: dict[tuple, _BankGroup] = {}
+        self.dyn: list[tuple] = []
+
+    def conflicting(self, key: tuple) -> list[_BankGroup]:
+        out = []
+        if None in key:
+            for k, g in self.groups.items():
+                if _tuples_conflict(key, k):
+                    out.append(g)
+            return out
+        g = self.groups.get(key)
+        if g is not None:
+            out.append(g)
+        for k in self.dyn:
+            if _tuples_conflict(key, k):
+                out.append(self.groups[k])
+        return out
+
+    def group(self, key: tuple) -> _BankGroup:
+        g = self.groups.get(key)
+        if g is None:
+            g = self.groups[key] = _BankGroup()
+            if None in key:
+                self.dyn.append(key)
+        return g
+
+
+def _chained_memory_edges(
+    ops: list[Operation],
+    touches_of: Callable[[Operation], list[Touch]],
+    latency_of: Callable[[Operation], int],
+    edges: list[DepEdge],
+) -> None:
+    """Memory serialization edges for a non-pipelined region, transitively
+    reduced: instead of the all-pairs scan (every later access vs every
+    earlier conflicting access), each access depends only on the current
+    *frontier* of its storage — the reads since the last conflicting write,
+    the last write itself, and the last non-plain (loop/call) toucher.  Every
+    dropped all-pairs edge is implied by a frontier chain with total latency
+    at least as large (latencies are non-negative), so the least fixpoint of
+    the difference constraints — and therefore the schedule — is identical;
+    the edge count drops from quadratic to near-linear in the region size.
+    """
+    state: dict[object, _StorageChain] = {}
+    for o in ops:
+        to = touches_of(o)
+        if not to:
+            continue
+        if o.opname in ("mem_read", "mem_write"):
+            tch = to[0]
+            s = state.get(tch.storage)
+            if s is None:
+                s = state[tch.storage] = _StorageChain()
+            targets: list[Operation] = []
+            if s.barrier is not None:
+                targets.append(s.barrier)
+            key = tch.bank_consts
+            if tch.is_write:
+                for g in s.conflicting(key):
+                    if g.reads:
+                        targets.extend(g.reads)
+                    elif g.last_write is not None:
+                        targets.append(g.last_write)
+                g = s.group(key)
+                g.last_write = o
+                g.reads.clear()
+            else:
+                for g in s.conflicting(key):
+                    if g.last_write is not None:
+                        targets.append(g.last_write)
+                s.group(key).reads.append(o)
+            for p in targets:
+                edges.append(DepEdge(p, o, latency_of(p), 0))
+        else:
+            # loop/call child: conflicts with everything on every storage it
+            # touches — collect each storage's frontier, then become its
+            # barrier
+            for storage in {tc.storage for tc in to}:
+                s = state.get(storage)
+                if s is None:
+                    s = state[storage] = _StorageChain()
+                targets = []
+                if s.barrier is not None:
+                    targets.append(s.barrier)
+                for g in s.groups.values():
+                    if g.reads:
+                        targets.extend(g.reads)
+                    elif g.last_write is not None:
+                        targets.append(g.last_write)
+                s.groups.clear()
+                s.dyn.clear()
+                s.barrier = o
+                for p in targets:
+                    edges.append(DepEdge(p, o, latency_of(p), 0))
+
+
 def build_dependence_edges(
     ops: list[Operation],
     touches_of: Callable[[Operation], list[Touch]],
@@ -326,9 +458,13 @@ def build_dependence_edges(
       * SSA edges (producer -> consumer, weighted by the producer latency),
         including uses held by ops nested inside a consumer's regions;
       * memory edges per shared storage — conservative serialization, with
-        read-read pairs and provably-distinct banks exempt;
+        read-read pairs and provably-distinct banks exempt; non-pipelined
+        regions use the transitively-reduced frontier chains
+        (``_chained_memory_edges``, same least fixpoint, near-linear size);
       * distance-1 carried edges for non-iteration-private accesses and for
-        loop/call children that reoccupy their resources (``carried=True``).
+        loop/call children that reoccupy their resources (``carried=True``;
+        pipelining candidates are innermost loops, small enough for the
+        exact all-pairs scan the carried analysis needs).
     """
     edges: list[DepEdge] = []
     producer: dict[Value, Operation] = {}
@@ -345,6 +481,12 @@ def build_dependence_edges(
                 for v in b.operands:
                     if v in producer and producer[v] is not o:
                         edges.append(DepEdge(producer[v], o, latency_of(producer[v]), 0))
+
+    if not carried:
+        for o in ops:
+            ssa_deps(o)
+        _chained_memory_edges(ops, touches_of, latency_of, edges)
+        return edges
 
     seen: list[Operation] = []
     for o in ops:

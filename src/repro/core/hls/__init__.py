@@ -1,2 +1,6 @@
 from .eraser import erase_schedule  # noqa: F401
-from .scheduler import HLSResult, hls_compile, hls_schedule  # noqa: F401
+from .scheduler import (HLSResult, HLSScheduler, SchedulerOptions,  # noqa: F401
+                        hls_compile, hls_schedule)
+from .dse import (DSEConfig, DSEPoint, DSEResult, ScheduleCache,  # noqa: F401
+                  design_space, explore_design, merge_local_banks,
+                  pareto_front)

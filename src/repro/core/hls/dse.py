@@ -1,0 +1,447 @@
+"""Design-space exploration + search memoization for the HLS baseline
+(ScaleHLS-style autotuning on top of the paper's scheduler stand-in).
+
+Three related facilities live here:
+
+**Structural fingerprints** — a stable hash of a function/module printed
+with a *positional* value namer, so two structurally identical builds hash
+equal even though anonymous SSA values carry build-dependent global ids.
+The fingerprint is purely textual: it never incorporates the process-global
+interned RTL expression keys (PR 5), which are not stable across processes,
+so cache entries stay valid regardless of interning state.
+
+**Search caches** — ``ScheduleCache`` memoizes whole-function schedule
+searches (scheduled HIR text + result metadata, LRU) and ``CompileCache``
+memoizes whole ``hls_compile`` runs (final module text + netlist objects).
+Both are in-memory, per-process, and expose ``AnalysisManager``-style
+hit/miss stats; ``REPRO_HLS_CACHE=0`` disables them globally.
+
+**The explorer** — ``explore_design(module, space)`` sweeps
+:class:`DSEConfig` candidates (pipeline on/off, min II, clock budget,
+unroll stagger, bank merging) on a ``concurrent.futures`` process pool
+(gracefully serial at ``max_workers=1`` — deterministic output either way),
+scores each point with the simulator's cycle count against
+``report_design``'s LUT/FF, verifies each candidate's simulation output
+against an expected oracle array, and returns the Pareto frontier over
+(latency_ns, LUT, FF).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import re
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from .. import ir
+from ..ir import FuncOp, Module
+from ..printer import _Namer, print_func, print_module
+from ..schedule import CLOCK_NS
+from .scheduler import HLSScheduler, SchedulerOptions, _func_meta
+
+# ---------------------------------------------------------------------------
+# Structural fingerprints
+# ---------------------------------------------------------------------------
+
+
+_AUTO_NAME = re.compile(r"v\d+")
+
+
+class _StructuralNamer(_Namer):
+    """Names auto-generated values positionally (``_s0``, ``_s1``, ...)
+    instead of by global ``Value.id``, so the printed text — and its hash —
+    depends only on the function's structure, not on how many values the
+    process allocated before building it.  Values carry ``v{id}`` default
+    names from construction (or from parsing previously printed text), so
+    any ``v<digits>`` name is treated as positional; human-chosen names
+    (args, induction vars) are kept since they surface in backend output."""
+
+    def name(self, v) -> str:
+        if v not in self.names and _AUTO_NAME.fullmatch(v.name or ""):
+            nm = f"_s{len(self.names)}"
+            self.names[v] = nm
+            self.used.add(nm)
+            return nm
+        return super().name(v)
+
+
+def fingerprint_func(f: FuncOp, extra: tuple = ()) -> str:
+    """Structural hash of one function (plus scheduler-option identity)."""
+    h = hashlib.sha256()
+    h.update(print_func(f, namer=_StructuralNamer()).encode())
+    h.update(repr(extra).encode())
+    return h.hexdigest()
+
+
+def fingerprint_module(m: Module, extra: tuple = ()) -> str:
+    """Structural hash of a whole module: per-function fingerprints in
+    definition order (module name excluded — identity is the content)."""
+    h = hashlib.sha256()
+    for f in m.funcs.values():
+        h.update(f.name.encode())
+        h.update(print_func(f, namer=_StructuralNamer()).encode())
+    h.update(repr(extra).encode())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CacheEntry:
+    text: str   # printed scheduled function
+    meta: dict  # HLSResult fragment (iis / miis / probes / counters)
+
+
+@dataclass
+class CompileEntry:
+    module: Module  # final (post-optimize, post-unroll) module, private copy
+    netlists: dict  # {name: VerilogModule} — process-local objects
+    meta: dict
+
+
+class ScheduleCache:
+    """LRU memo of schedule-search results keyed by structural fingerprint,
+    with ``AnalysisManager``-style statistics."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._d: OrderedDict[str, object] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str):
+        e = self._d.get(key)
+        if e is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return e
+
+    def put(self, key: str, *args) -> None:
+        self._d[key] = self._make_entry(*args)
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    @staticmethod
+    def _make_entry(text: str, meta: dict) -> CacheEntry:
+        return CacheEntry(text, meta)
+
+    def clear(self) -> None:
+        self._d.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def stats_dict(self) -> dict:
+        return {"entries": len(self._d), "hits": self.hits,
+                "misses": self.misses}
+
+
+class CompileCache(ScheduleCache):
+    @staticmethod
+    def _make_entry(module: Module, netlists: dict, meta: dict) -> CompileEntry:
+        # Clone at insert time so later caller mutations can't corrupt the
+        # entry; hits hand out fresh clones (an order of magnitude cheaper
+        # than re-parsing the post-unroll module text).
+        return CompileEntry(module.clone(), dict(netlists), meta)
+
+
+#: process-wide default caches (``REPRO_HLS_CACHE=0`` bypasses both)
+SCHEDULE_CACHE = ScheduleCache()
+COMPILE_CACHE = CompileCache(capacity=64)
+
+
+def apply_cached_schedule(module: Module, f: FuncOp, entry: CacheEntry) -> None:
+    """Replace ``f`` with the cached scheduled function (print/parse round
+    trip — the printer is the IR's canonical serialization)."""
+    splice_func_text(module, f.name, entry.text)
+
+
+def splice_func_text(module: Module, fname: str, text: str) -> None:
+    from ..parser import parse_func
+
+    module.funcs[fname] = parse_func(text)
+
+
+def replace_module_contents(module: Module, src: Module) -> None:
+    """Install ``src``'s functions into ``module`` (compile-cache hit path).
+
+    The functions are *shared* with the cache entry, mirroring how netlist
+    objects are handed out: compiled modules are consumed read-only
+    (``simulate``/``report_design``/printing never mutate IR), and a deep
+    clone per hit would cost more than the whole warm compile.  Callers who
+    want to mutate a cache-served module must ``module.clone()`` it first."""
+    module.funcs.clear()
+    module.funcs.update(src.funcs)
+
+
+# ---------------------------------------------------------------------------
+# Parallel per-function scheduling (used by hls_schedule(max_workers>1))
+# ---------------------------------------------------------------------------
+
+
+def _schedule_one_func(payload):
+    """Pool worker: parse the module text, schedule one function, return its
+    printed scheduled form + result metadata.  Top-level by necessity
+    (ProcessPoolExecutor pickles the callable by reference)."""
+    module_text, fname, opts = payload
+    from ..parser import parse
+
+    m = parse(module_text)
+    s = HLSScheduler(m, options=opts)
+    s.schedule_func(m.get(fname))
+    return print_func(m.get(fname)), _func_meta(s.result)
+
+
+def schedule_funcs_parallel(module: Module, fnames: list[str],
+                            opts: SchedulerOptions, max_workers: int):
+    """Schedule ``fnames`` concurrently on a process pool; returns
+    ``[(scheduled text, meta), ...]`` in input order, or None when no pool
+    can be created (sandboxes without semaphores, missing multiprocessing) —
+    the caller then falls back to the serial path, which produces the
+    byte-identical result."""
+    text = print_module(module)
+    payloads = [(text, fn, opts) for fn in fnames]
+    try:
+        from concurrent.futures import ProcessPoolExecutor
+
+        with ProcessPoolExecutor(max_workers=max_workers) as ex:
+            return list(ex.map(_schedule_one_func, payloads))
+    except Exception:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Design-space exploration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DSEConfig:
+    """One autotuner candidate: scheduler knobs + structural knobs."""
+
+    pipeline: bool = True
+    min_ii: int = 1
+    clock_ns: float = CLOCK_NS
+    unroll_parallel: bool = True
+    merge_banks: bool = False
+
+    def scheduler_options(self) -> SchedulerOptions:
+        return SchedulerOptions(pipeline_loops=self.pipeline,
+                                min_ii=self.min_ii, clock_ns=self.clock_ns,
+                                unroll_parallel=self.unroll_parallel)
+
+    def as_dict(self) -> dict:
+        return {"pipeline": self.pipeline, "min_ii": self.min_ii,
+                "clock_ns": self.clock_ns,
+                "unroll_parallel": self.unroll_parallel,
+                "merge_banks": self.merge_banks}
+
+
+def design_space(pipeline: Sequence[bool] = (True, False),
+                 min_ii: Sequence[int] = (1,),
+                 clock_ns: Sequence[float] = (CLOCK_NS,),
+                 unroll_parallel: Sequence[bool] = (True,),
+                 merge_banks: Sequence[bool] = (False,)) -> list[DSEConfig]:
+    """Cartesian product of the knob axes, with redundant points removed
+    (``min_ii`` only matters when pipelining), in deterministic order."""
+    out: list[DSEConfig] = []
+    seen = set()
+    for p in pipeline:
+        for mi in (min_ii if p else (1,)):
+            for ck in clock_ns:
+                for up in unroll_parallel:
+                    for mb in merge_banks:
+                        c = DSEConfig(p, mi, ck, up, mb)
+                        if c not in seen:
+                            seen.add(c)
+                            out.append(c)
+    return out
+
+
+def merge_local_banks(module: Module) -> int:
+    """Banking knob: fold every *distributed* local LUTRAM/BRAM alloc into a
+    single fully-packed bank (fewer physical RAMs -> fewer LUT/FF, but the
+    scheduler must serialize the accesses that used to hit distinct banks).
+    Register banks are excluded — their FF cost is per element regardless of
+    banking, so merging only destroys parallelism for free.  Returns the
+    number of ports retyped."""
+    n = 0
+    for f in module.funcs.values():
+        if f.attrs.get("external"):
+            continue
+        for op in f.body.walk():
+            if op.opname != "alloc":
+                continue
+            for r in op.results:
+                mt = r.type
+                if (isinstance(mt, ir.MemrefType) and mt.distributed
+                        and mt.kind in (ir.KIND_LUTRAM, ir.KIND_BRAM)):
+                    r.type = ir.MemrefType(mt.shape, mt.elem, mt.port,
+                                           packed=list(range(len(mt.shape))),
+                                           kind=mt.kind)
+                    n += 1
+    return n
+
+
+def has_mergeable_banks(module: Module) -> bool:
+    for f in module.funcs.values():
+        if f.attrs.get("external"):
+            continue
+        for op in f.body.walk():
+            if op.opname == "alloc":
+                for r in op.results:
+                    mt = r.type
+                    if (isinstance(mt, ir.MemrefType) and mt.distributed
+                            and mt.kind in (ir.KIND_LUTRAM, ir.KIND_BRAM)):
+                        return True
+    return False
+
+
+@dataclass
+class DSEPoint:
+    config: DSEConfig
+    latency_cycles: Optional[int] = None
+    latency_ns: Optional[float] = None
+    lut: int = 0
+    ff: int = 0
+    dsp: int = 0
+    bram: int = 0
+    iis: dict = field(default_factory=dict)
+    verified: bool = False
+    error: Optional[str] = None
+
+    def objectives(self) -> Optional[tuple]:
+        if self.latency_ns is None or self.error is not None:
+            return None
+        return (self.latency_ns, self.lut, self.ff)
+
+    def as_dict(self) -> dict:
+        return {"config": self.config.as_dict(),
+                "latency_cycles": self.latency_cycles,
+                "latency_ns": self.latency_ns,
+                "lut": self.lut, "ff": self.ff, "dsp": self.dsp,
+                "bram": self.bram, "iis": self.iis,
+                "verified": self.verified, "error": self.error}
+
+
+def dominates(a: tuple, b: tuple) -> bool:
+    """Pareto dominance on minimization objectives."""
+    return all(x <= y for x, y in zip(a, b)) and any(x < y for x, y in zip(a, b))
+
+
+def pareto_front(points: Sequence[DSEPoint]) -> list[DSEPoint]:
+    """Non-dominated verified points over (latency_ns, LUT, FF), one per
+    distinct objective vector, sorted by latency then area."""
+    usable = [p for p in points if p.verified and p.objectives() is not None]
+    front: list[DSEPoint] = []
+    seen_obj = set()
+    for p in usable:
+        po = p.objectives()
+        if po in seen_obj:
+            continue
+        if any(dominates(q.objectives(), po) for q in usable):
+            continue
+        seen_obj.add(po)
+        front.append(p)
+    front.sort(key=lambda p: p.objectives())
+    return front
+
+
+def _evaluate_candidate(payload) -> dict:
+    """Pool worker: schedule + optimize + emit + simulate one candidate.
+    Returns a plain dict (picklable) — errors become a scored-out point
+    rather than killing the sweep."""
+    module_text, entry, config, inputs, expected, pipeline_spec = payload
+    import numpy as np
+
+    from ..codegen import generate_verilog
+    from ..codegen.resources import report_design
+    from ..lower import simulate
+    from ..parser import parse
+    from ..passmgr import DEFAULT_PIPELINE_SPEC, PassManager
+    from .scheduler import hls_schedule
+
+    try:
+        m = parse(module_text)
+        if config.merge_banks:
+            merge_local_banks(m)
+        res = hls_schedule(m, options=config.scheduler_options())
+        spec = DEFAULT_PIPELINE_SPEC if pipeline_spec is None else pipeline_spec
+        if spec:
+            PassManager.from_spec(spec).run(m)
+        vs = generate_verilog(m, entry=entry)
+        rep = report_design(vs, entry=entry)
+        point = {"config": config, "iis": dict(res.iis),
+                 "lut": rep.lut, "ff": rep.ff, "dsp": rep.dsp,
+                 "bram": rep.bram, "latency_cycles": None,
+                 "latency_ns": None, "verified": False, "error": None}
+        if inputs is not None:
+            args = [np.array(a, copy=True) if isinstance(a, np.ndarray) else a
+                    for a in inputs]
+            simres = simulate(m, entry, args)
+            point["latency_cycles"] = int(simres["cycles"])
+            point["latency_ns"] = float(simres["cycles"]) * config.clock_ns
+            if expected is not None:
+                point["verified"] = bool(np.array_equal(args[-1], expected))
+        return point
+    except Exception as e:  # scored out, sweep continues
+        return {"config": config, "error": f"{type(e).__name__}: {e}",
+                "verified": False, "iis": {}, "lut": 0, "ff": 0, "dsp": 0,
+                "bram": 0, "latency_cycles": None, "latency_ns": None}
+
+
+def _map_candidates(payloads: list, max_workers: int) -> list[dict]:
+    if max_workers > 1 and len(payloads) > 1:
+        try:
+            from concurrent.futures import ProcessPoolExecutor
+
+            with ProcessPoolExecutor(max_workers=max_workers) as ex:
+                return list(ex.map(_evaluate_candidate, payloads))
+        except Exception:
+            pass  # no pool available: fall through to the serial sweep
+    return [_evaluate_candidate(p) for p in payloads]
+
+
+@dataclass
+class DSEResult:
+    points: list[DSEPoint]
+    front: list[DSEPoint]
+
+    def as_dict(self) -> dict:
+        return {"points": [p.as_dict() for p in self.points],
+                "pareto_front": [p.as_dict() for p in self.front]}
+
+
+def explore_design(module: Module, space: Sequence[DSEConfig],
+                   entry: Optional[str] = None, inputs=None, expected=None,
+                   max_workers: int = 1,
+                   pipeline_spec: Optional[str] = None) -> DSEResult:
+    """Sweep ``space`` over (an erased copy of) ``module``: each candidate is
+    scheduled under its knobs, optimized, emitted, resource-scored
+    (``report_design``) and — when ``inputs`` are given — simulated for its
+    cycle count and verified against ``expected`` (the oracle's output
+    array).  Candidates run on a process pool when ``max_workers > 1``
+    (serial fallback is byte-identical).  Returns every scored point plus
+    the Pareto frontier over (latency_ns, LUT, FF)."""
+    from .eraser import erase_schedule
+
+    base = erase_schedule(module.clone())
+    text = print_module(base)
+    payloads = [(text, entry, cfg, inputs, expected, pipeline_spec)
+                for cfg in space]
+    rows = _map_candidates(payloads, max_workers)
+    points = [DSEPoint(config=r["config"], latency_cycles=r["latency_cycles"],
+                       latency_ns=r["latency_ns"], lut=r["lut"], ff=r["ff"],
+                       dsp=r["dsp"], bram=r["bram"], iis=r["iis"],
+                       verified=r["verified"], error=r["error"])
+              for r in rows]
+    return DSEResult(points, pareto_front(points))

@@ -665,7 +665,8 @@ def mem_read(mem: Value, indices: Sequence[Value], start: Time, loc: Loc = UNKNO
     assert mt.port in (PORT_R, PORT_RW), f"mem_read on write-only memref {mem}"
     assert len(indices) == len(mt.shape), (len(indices), mt.shape)
     op = Operation("mem_read", [mem, *indices], [mt.elem], start=start, loc=loc)
-    op.result.birth = start + mt.read_latency()
+    if start is not None:  # unscheduled (erased) reads have no birth yet
+        op.result.birth = start + mt.read_latency()
     return op
 
 
@@ -913,8 +914,9 @@ def call(
         start=start,
         loc=loc,
     )
-    for r, d in zip(op.results, result_delays):
-        r.birth = start + d
+    if start is not None:  # unscheduled (erased) calls have no birth yet
+        for r, d in zip(op.results, result_delays):
+            r.birth = start + d
     return op
 
 

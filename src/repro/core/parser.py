@@ -313,12 +313,16 @@ class Parser:
             lx.expect("iter_time")
             lx.expect("(")
             tvn = lx.next()[1][1:]
-            lx.expect("=")
-            base_tv = self._parse_value_ref()
-            lx.expect("offset")
-            off = int(lx.next()[1])
+            if lx.accept("unscheduled"):  # erased IR: loop has no start yet
+                start = None
+            else:
+                lx.expect("=")
+                base_tv = self._parse_value_ref()
+                lx.expect("offset")
+                off = int(lx.next()[1])
+                start = Time(base_tv, off)
             lx.expect(")")
-            op = ir.ForOp(lb, ub, step, start=Time(base_tv, off), iv_type=ivt, unroll=(o == "unroll_for"),
+            op = ir.ForOp(lb, ub, step, start=start, iv_type=ivt, unroll=(o == "unroll_for"),
                           iv_name=ivn, tv_name=tvn)
             self._def(ivn, op.iv)
             self._def(tvn, op.time_var)

@@ -92,10 +92,13 @@ def print_op(op: Operation, n: _Namer, indent: int = 0) -> str:
     if o in ("for", "unroll_for"):
         f: ir.ForOp = op  # type: ignore[assignment]
         iv, tv = f.iv, f.time_var
+        # unscheduled loops (erased IR) have no start: round-trippable form
+        it = (f"{n.ref(tv)} = {n.ref(f.start.tv)} offset "
+              f"{f.start.offset + f.attrs.get('iter_arg_offset', 0)}"
+              if f.start is not None else f"{n.ref(tv)} unscheduled")
         hdr = (
             f"{pad}{eq}hir.{o} {n.ref(iv)} : {iv.type} = {n.ref(f.lb)} to {n.ref(f.ub)} "
-            f"step {n.ref(f.step)} iter_time({n.ref(tv)} = {n.ref(f.start.tv)} offset "
-            f"{f.start.offset + f.attrs.get('iter_arg_offset', 0)})"
+            f"step {n.ref(f.step)} iter_time({it})"
         )
         body = "\n".join(print_op(x, n, indent + 1) for x in f.region(0).ops)
         return f"{hdr} {{\n{body}\n{pad}}}"
@@ -123,8 +126,11 @@ def print_op(op: Operation, n: _Namer, indent: int = 0) -> str:
     raise NotImplementedError(f"printer: unknown op {o}")  # pragma: no cover
 
 
-def print_func(f: FuncOp, indent: int = 0) -> str:
-    n = _Namer()
+def print_func(f: FuncOp, indent: int = 0, namer: Optional[_Namer] = None) -> str:
+    """Print one function.  ``namer`` lets callers substitute a different
+    naming policy — e.g. the structural (positional) namer the HLS search
+    cache uses for build-independent function fingerprints."""
+    n = namer if namer is not None else _Namer()
     pad = "  " * indent
     tv = n.ref(f.time_var)
     args = []

@@ -427,6 +427,20 @@ def verify_func(func: FuncOp, strict_schedule: bool = True,
     return Verifier(func, strict_schedule, am=am).run()
 
 
+def validity_windows(func: FuncOp, am: Optional[AnalysisManager] = None) -> Verifier:
+    """Compute only the value-validity windows (loop analysis + time-variable
+    root tree + window propagation) without running the quadratic op/port
+    legality checks.  Linear in the function size; this is what pipeline
+    balancing (``core.schedule.balance_delays``) iterates on, where the full
+    ``Verifier.run`` would dominate the whole HLS search."""
+    v = Verifier(func, strict_schedule=False, am=am)
+    v.loops = (am.get(LoopAnalysis, func) if am is not None else analyze_loops(func))
+    v._iv_loop = {l.iv: li for l, li in v.loops.items()}
+    v._build_root_tree()
+    v._compute_windows()
+    return v
+
+
 def verify(module_or_func, strict_schedule: bool = True, raise_on_error: bool = True,
            am: Optional[AnalysisManager] = None) -> list[Diagnostic]:
     """Verify a module or function.  ``am`` shares the cached loop/port

@@ -1,0 +1,281 @@
+"""Tests of the MII-bounded modulo-schedule search: the II search must start
+at max(resMII, recMII) and never probe below it, galloping + binary search
+must find the same minimal II as the reference linear scan (with schedules
+identical up to auto-generated value names), scheduler options must thread
+through ``hls_compile``, and the fingerprint caches must serve warm repeats
+with identical output."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ir
+from repro.core.builder import Builder
+from repro.core.gallery import GALLERY, PAPER_BENCHMARKS
+from repro.core.hls import (SchedulerOptions, erase_schedule, hls_compile,
+                            hls_schedule)
+from repro.core.hls import dse
+from repro.core.lower import simulate
+from repro.core.parser import parse
+from repro.core.printer import print_func, print_module
+
+
+def _structural(m):
+    """Printed module with positional names for auto-generated values, so
+    schedules compare equal across runs that allocate different global ids
+    (balance-inserted delays are anonymous)."""
+    return "\n".join(print_func(f, 1, namer=dse._StructuralNamer())
+                     for f in m.funcs.values())
+
+
+# ---------------------------------------------------------------------------
+# MII lower bounds
+# ---------------------------------------------------------------------------
+
+
+def _build_port_pressure(n_reads: int):
+    """One single-bank read port accessed ``n_reads`` times per iteration:
+    resMII = n_reads."""
+    b = Builder(ir.Module("m"))
+    rmem = ir.MemrefType((16,), ir.i32, ir.PORT_R)
+    wmem = ir.MemrefType((16,), ir.i32, ir.PORT_W)
+    with b.func("f", [rmem, wmem], ["Ai", "Bo"]) as f:
+        Ai, Bo = f.args
+        with b.for_(0, 16, 1, at=f.t, iv_name="i") as li:
+            b.yield_(at=li.time + 1)
+            vs = [b.read(Ai, [li.iv], at=li.time + k) for k in range(n_reads)]
+            s = vs[0]
+            for v in vs[1:]:
+                s = b.add(s, v)
+            b.write(s, Bo, [li.iv], at=li.time + n_reads)
+        b.ret()
+    return b.module
+
+
+def test_resmii_bound_from_port_pressure():
+    um = erase_schedule(_build_port_pressure(4))
+    res = hls_schedule(um)
+    assert res.miis["i"] == 4          # 4 accesses on one bank
+    assert res.iis["i"] == 4           # bound is tight here
+    assert res.ii_probes["i"] == [4]   # a from-1 scan would probe 1,2,3,4
+
+
+def test_recmii_bound_from_carried_recurrence():
+    """Read-modify-write through one BRAM cell: the carried cycle
+    read -> add -> write -> (next-iteration) read forces II >= 2."""
+    b = Builder(ir.Module("m"))
+    rmem = ir.MemrefType((16,), ir.i32, ir.PORT_R)
+    wmem = ir.MemrefType((16,), ir.i32, ir.PORT_W)
+    with b.func("g", [rmem, wmem], ["Ai", "Bo"]) as f:
+        Ai, Bo = f.args
+        acc = ir.MemrefType((1,), ir.i32, kind=ir.KIND_BRAM)
+        Ar, Aw = b.alloc(acc, names=["Ar", "Aw"])
+        with b.for_(0, 16, 1, at=f.t, iv_name="i") as li:
+            b.yield_(at=li.time + 2)
+            x = b.read(Ai, [li.iv], at=li.time)
+            a = b.read(Ar, [0], at=li.time)
+            s = b.add(a, x)
+            b.write(s, Aw, [0], at=li.time + 1)
+            b.write(s, Bo, [li.iv], at=li.time + 1)
+        b.ret()
+    um = erase_schedule(b.module)
+    res = hls_schedule(um)
+    assert res.miis["i"] == 2
+    assert res.iis["i"] == 2
+    assert res.ii_probes["i"] == [2]
+
+
+@pytest.mark.parametrize("name", PAPER_BENCHMARKS)
+def test_search_never_probes_below_mii(name):
+    m, _ = GALLERY[name].build()
+    res = hls_schedule(erase_schedule(m))
+    assert res.ii_probes, "no pipelined loops probed"
+    for iv, probes in res.ii_probes.items():
+        mii = res.miis[iv]
+        assert probes[0] == mii, (iv, probes, mii)
+        assert min(probes) >= mii, (iv, probes, mii)
+        assert res.iis[iv] >= mii
+
+
+def test_mii_bound_prunes_the_scan():
+    """Across the gallery the bounded search probes no more often than a
+    from-1 linear scan would (one probe per II value up to the answer), and
+    strictly fewer on histogram (II = 2, bound = 2: one probe, not two)."""
+    total_probes, total_from1 = 0, 0
+    for name in PAPER_BENCHMARKS:
+        m, _ = GALLERY[name].build()
+        res = hls_schedule(erase_schedule(m))
+        for iv, probes in res.ii_probes.items():
+            total_probes += len(probes)
+            total_from1 += res.iis[iv]
+            assert len(probes) <= res.iis[iv]
+    assert total_probes < total_from1
+
+
+# ---------------------------------------------------------------------------
+# Gallop + binary search vs the reference linear scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", PAPER_BENCHMARKS)
+def test_gallop_matches_linear_scan(name):
+    m, _ = GALLERY[name].build()
+    txt = print_module(erase_schedule(m))
+    ua, ub = parse(txt), parse(txt)
+    ra = hls_schedule(ua)
+    rb = hls_schedule(ub, options=SchedulerOptions(linear_scan=True))
+    assert ra.iis == rb.iis
+    assert ra.miis == rb.miis
+    assert _structural(ua) == _structural(ub)
+    assert ra.search_iters <= rb.search_iters
+
+
+# ---------------------------------------------------------------------------
+# Unroll staggering (nested loops through MemTouches summaries)
+# ---------------------------------------------------------------------------
+
+
+def _build_nested_unroll(banked: bool):
+    """Outer ``unroll_for`` whose body is an inner sequential loop writing a
+    2-d memref: with dim 0 distributed each unrolled lane owns a bank and
+    lanes run parallel; with a shared monolithic port they must stagger.
+    The stagger decision sees the inner *loop's* summarized touches — the
+    path the seed's dead ``isinstance(o, ForOp)`` branch never reached."""
+    b = Builder(ir.Module("m"))
+    packed = [1] if banked else [0, 1]
+    wmem = ir.MemrefType((4, 8), ir.i32, ir.PORT_W, packed=packed,
+                         kind=ir.KIND_BRAM)
+    with b.func("f", [wmem], ["Bo"]) as f:
+        Bo, = f.args
+        with b.for_(0, 4, 1, at=f.t, unroll=True, iv_name="u") as lu:
+            b.yield_(at=lu.time)
+            with b.for_(0, 8, 1, at=lu.time, iv_name="i") as li:
+                b.yield_(at=li.time + 1)
+                b.write(li.iv, Bo, [lu.iv, li.iv], at=li.time)
+        b.ret()
+    return b.module
+
+
+@pytest.mark.parametrize("banked,want_parallel", [(True, True), (False, False)])
+def test_nested_loop_unroll_stagger(banked, want_parallel):
+    um = erase_schedule(_build_nested_unroll(banked))
+    hls_schedule(um)
+    outer = next(op for op in um.get("f").body.ops if isinstance(op, ir.ForOp))
+    y = outer.yield_op()
+    assert y.start.tv is outer.time_var
+    if want_parallel:
+        assert y.start.offset == 0      # per-lane banks: fully parallel
+    else:
+        assert y.start.offset >= 8      # shared port: serialized lanes
+
+
+def test_unroll_parallel_option_forces_stagger():
+    um = erase_schedule(_build_nested_unroll(True))
+    hls_schedule(um, options=SchedulerOptions(unroll_parallel=False))
+    outer = next(op for op in um.get("f").body.ops if isinstance(op, ir.ForOp))
+    assert outer.yield_op().start.offset >= 1
+
+
+# ---------------------------------------------------------------------------
+# Option threading through hls_compile
+# ---------------------------------------------------------------------------
+
+
+def test_hls_compile_threads_pipeline_loops():
+    m, entry = GALLERY["stencil1d"].build()
+    um = erase_schedule(m)
+    res, _ = hls_compile(um, entry=entry, pipeline_loops=False, cache=False)
+    assert res.miis == {}          # no modulo search ran
+    assert res.ii_probes == {}
+    assert all(ii >= 1 for ii in res.iis.values())
+
+
+def test_hls_compile_threads_scheduler_options():
+    m, entry = GALLERY["stencil1d"].build()
+    um = erase_schedule(m)
+    res, _ = hls_compile(um, entry=entry,
+                         options=SchedulerOptions(min_ii=3), cache=False)
+    assert res.ii_probes, "expected pipelined loops"
+    assert all(mii >= 3 for mii in res.miis.values())
+    assert all(ii >= 3 for ii in res.iis.values() if ii)
+    # and the throttled design still computes the right answer
+    gal = GALLERY["stencil1d"]
+    ins = gal.make_inputs()
+    simulate(um, entry, ins)
+    np.testing.assert_array_equal(ins[-1], gal.oracle(ins[0]))
+
+
+# ---------------------------------------------------------------------------
+# Fingerprint caches
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_cache_hits_and_identity():
+    cache = dse.ScheduleCache()
+    m, _ = GALLERY["transpose"].build()
+    erased = erase_schedule(m)
+    m1, m2 = erased.clone(), erased.clone()
+    r1 = hls_schedule(m1, cache=cache)
+    assert (r1.search_cache_hits, r1.search_cache_misses) == (0, 1)
+    r2 = hls_schedule(m2, cache=cache)
+    assert (r2.search_cache_hits, r2.search_cache_misses) == (1, 0)
+    assert r2.iis == r1.iis and r2.miis == r1.miis
+    assert _structural(m1) == _structural(m2)
+    assert cache.stats_dict()["hits"] == 1
+
+
+def test_compile_cache_warm_repeat_identical():
+    m, entry = GALLERY["gemm"].build()
+    erased = erase_schedule(m)
+    dse.COMPILE_CACHE.clear()
+    dse.SCHEDULE_CACHE.clear()
+    m1, m2 = erased.clone(), erased.clone()
+    r1, v1 = hls_compile(m1, entry=entry)
+    r2, v2 = hls_compile(m2, entry=entry)
+    assert not r1.from_cache and r2.from_cache
+    assert r2.search_cache_stats()["hits"] >= 1
+    assert print_module(m1) == print_module(m2)     # scheduled HIR identical
+    assert set(v1) == set(v2)                       # backend output identical
+    for name in v1:
+        assert v1[name].text == v2[name].text
+    assert r2.iis == r1.iis
+
+
+@pytest.mark.skipif(os.environ.get("REPRO_SKIP_PERF") == "1",
+                    reason="perf asserts skipped on slow runners")
+def test_compile_cache_warm_repeat_is_10x_faster():
+    import time
+
+    m, entry = GALLERY["gemm"].build()
+    erased = erase_schedule(m)
+    dse.COMPILE_CACHE.clear()
+    dse.SCHEDULE_CACHE.clear()
+    t0 = time.perf_counter()
+    hls_compile(erased.clone(), entry=entry)
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res, _ = hls_compile(erased.clone(), entry=entry)
+    warm = time.perf_counter() - t0
+    assert res.from_cache
+    assert cold >= 10 * warm, (cold, warm)
+
+
+def test_cache_kill_switch(monkeypatch):
+    monkeypatch.setenv("REPRO_HLS_CACHE", "0")
+    m, entry = GALLERY["transpose"].build()
+    erased = erase_schedule(m)
+    r1, _ = hls_compile(erased.clone(), entry=entry)
+    r2, _ = hls_compile(erased.clone(), entry=entry)
+    assert not r1.from_cache and not r2.from_cache
+    assert r2.search_cache_stats()["hits"] == 0
+
+
+def test_parallel_schedule_matches_serial():
+    m, _ = GALLERY["gemm"].build()
+    erased = erase_schedule(m)
+    ma, mb = erased.clone(), erased.clone()
+    ra = hls_schedule(ma, max_workers=1)
+    rb = hls_schedule(mb, max_workers=2)
+    assert ra.iis == rb.iis and ra.miis == rb.miis
+    assert _structural(ma) == _structural(mb)
