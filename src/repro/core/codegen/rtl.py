@@ -712,6 +712,55 @@ class PortConflictAssert(Item):
         self.ens = [e.map_refs(ren) for e in self.ens]
 
 
+def clone_item(it: Item, ren: Optional[dict[str, str]] = None) -> Item:
+    """Copy one item, renaming *both* read references and destination names
+    through ``ren``.  Expressions are immutable and shared where unchanged;
+    memory and instance names go through the same map as nets, so a single
+    ``ren`` built from a module's full namespace relocates the whole item."""
+    ren = ren or {}
+
+    def nn(name: str) -> str:
+        return ren.get(name, name)
+
+    def ee(e: Expr) -> Expr:
+        return e.map_refs(ren) if ren else e
+
+    if isinstance(it, CombAssign):
+        return CombAssign(nn(it.dest), ee(it.expr), it.loc)
+    if isinstance(it, ShiftReg):
+        return ShiftReg(nn(it.dest), ee(it.src), it.width, it.depth,
+                        it.reset_zero, it.loc)
+    if isinstance(it, RegAssign):
+        return RegAssign(nn(it.dest), ee(it.src),
+                         None if it.en is None else ee(it.en), it.loc)
+    if isinstance(it, Memory):
+        return Memory(nn(it.name), it.banks, it.depth, it.width, it.kind,
+                      it.ports, it.loc)
+    if isinstance(it, MemRead):
+        return MemRead(nn(it.dest), nn(it.mem), it.bank, ee(it.addr),
+                       ee(it.en), it.loc)
+    if isinstance(it, MemWrite):
+        return MemWrite(nn(it.mem), it.bank, ee(it.addr), ee(it.data),
+                        ee(it.en), it.loc)
+    if isinstance(it, LoopController):
+        return LoopController(
+            nn(it.prefix), nn(it.iv), it.ivw, nn(it.active), nn(it.iter_net),
+            nn(it.endp) if it.endp else "", ee(it.start), ee(it.lb),
+            ee(it.ub), ee(it.step), it.ii,
+            None if it.inner_end is None else ee(it.inner_end),
+            nn(it.iicnt) if it.iicnt else "", it.loc)
+    if isinstance(it, Instance):
+        # output connections are Refs into the surrounding namespace: rename
+        # them like any other name (Instance.map_refs deliberately skips them
+        # because passes only rewrite *reads*; cloning relocates everything).
+        conns = [(p, Ref(nn(e.name)) if is_out else ee(e), is_out)
+                 for p, e, is_out in it.conns]
+        return Instance(it.module, nn(it.inst), conns, it.loc)
+    if isinstance(it, PortConflictAssert):
+        return PortConflictAssert(it.bus, [ee(e) for e in it.ens], it.loc)
+    raise NotImplementedError(type(it).__name__)
+
+
 # ---------------------------------------------------------------------------
 # Modules and designs
 # ---------------------------------------------------------------------------
@@ -797,6 +846,20 @@ class RTLModule:
             del self.nets[n]
         return len(dead)
 
+    def copy(self, name: Optional[str] = None) -> "RTLModule":
+        """Structural copy: fresh ports/nets/items, expressions shared (they
+        are immutable).  Snapshotting a module before a pass pipeline costs
+        O(items), not a deepcopy of the expression DAG."""
+        m = RTLModule(name or self.name, self.loc)
+        m.ports = [Port(p.name, p.dir, p.width) for p in self.ports]
+        m.nets = {n: Net(v.name, v.width, v.kind, v.signed, v.origin,
+                         v.comment) for n, v in self.nets.items()}
+        m.items = [clone_item(it) for it in self.items]
+        m.arg_ports = {i: list(v) for i, v in self.arg_ports.items()}
+        m.result_ports = list(self.result_ports)
+        m.source_func = self.source_func
+        return m
+
 
 class RTLDesign:
     """A set of RTL modules with a designated entry — what the RTL pass
@@ -830,6 +893,74 @@ class RTLDesign:
         for r in roots:
             visit(r, 1, ())
         return counts
+
+    def copy(self) -> "RTLDesign":
+        return RTLDesign({n: m.copy() for n, m in self.modules.items()},
+                         self.entry)
+
+    def flatten(self, entry: Optional[str] = None) -> RTLModule:
+        """Inline every ``Instance`` reachable from ``entry`` into one flat
+        module.  Callee nets/memories get an ``{inst}__`` prefix per
+        instantiation path; input-port connections become ``CombAssign``s
+        into the prefixed port net, output connections alias the parent net
+        to the callee's driver.  ``clk``/``rst`` are implicit in the item
+        semantics and dropped.  The flat module is what the vectorized
+        simulator (``codegen.sim``) interprets."""
+        entry = entry or self.entry
+        assert entry in self.modules, entry
+        flat = self.modules[entry].copy()
+        guard = 0
+        while True:
+            idx = next((i for i, it in enumerate(flat.items)
+                        if isinstance(it, Instance)), None)
+            if idx is None:
+                return flat
+            guard += 1
+            if guard > 100_000:  # cyclic instantiation would loop forever
+                raise RecursionError(f"flatten: instance explosion in {entry}")
+            inst = flat.items.pop(idx)
+            callee = self.modules[inst.module]
+            prefix = f"{inst.inst}__"
+            ren: dict[str, str] = {}
+            for nname in callee.nets:
+                ren[nname] = prefix + nname
+            for p in callee.ports:
+                if p.name not in ("clk", "rst"):
+                    ren.setdefault(p.name, prefix + p.name)
+            for mem in callee.memories():
+                ren.setdefault(mem, prefix + mem)
+            for sub in callee.instances():
+                ren.setdefault(sub.inst, prefix + sub.inst)
+            for v in callee.nets.values():
+                nn = ren[v.name]
+                assert nn not in flat.nets, nn
+                flat.nets[nn] = Net(nn, v.width, v.kind, v.signed,
+                                    v.origin or f"inline:{inst.inst}",
+                                    v.comment)
+            for p in callee.ports:
+                if p.name in ("clk", "rst"):
+                    continue
+                nn = ren[p.name]
+                if nn not in flat.nets:
+                    flat.nets[nn] = Net(nn, p.width, WIRE, False,
+                                        f"inline:{inst.inst}", "")
+            pre: list[Item] = []
+            post: list[Item] = []
+            conn_map = {p: (e, is_out) for p, e, is_out in inst.conns}
+            for p in callee.ports:
+                if p.name in ("clk", "rst"):
+                    continue
+                if p.name in conn_map:
+                    e, is_out = conn_map[p.name]
+                    if is_out:
+                        assert isinstance(e, Ref), (inst.inst, p.name)
+                        post.append(CombAssign(e.name, Ref(ren[p.name])))
+                    else:
+                        pre.append(CombAssign(ren[p.name], e))
+                elif p.dir == "input":
+                    pre.append(CombAssign(ren[p.name], zeros(p.width)))
+            body = [clone_item(it, ren) for it in callee.items]
+            flat.items[idx:idx] = pre + body + post
 
 
 # ---------------------------------------------------------------------------
@@ -1204,6 +1335,9 @@ class ControllerMerge(RTLPass):
                 idx.replace(old, new)
                 m.nets.pop(old, None)
             if it.iicnt:
+                # same ii (part of the key) implies the kept FSM has an
+                # iicnt too — redirect the II-phase readers to it
+                idx.replace(it.iicnt, kept.iicnt)
                 m.nets.pop(it.iicnt, None)
             drop.add(i)
             n += 1

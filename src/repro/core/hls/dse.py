@@ -29,10 +29,15 @@ against an expected oracle array, and returns the Pareto frontier over
 from __future__ import annotations
 
 import hashlib
+import os
+import pickle
 import re
 from collections import OrderedDict
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Optional, Sequence
+
+import numpy as np
 
 from .. import ir
 from ..ir import FuncOp, Module
@@ -66,9 +71,17 @@ class _StructuralNamer(_Namer):
         return super().name(v)
 
 
+# Bump whenever scheduling or codegen *semantics* change: fingerprints are
+# the keys of the persistent DiskCompileCache, so entries produced by an
+# older compiler must miss rather than resurrect its output (e.g. the
+# result-delay reconciliation fix changed every schedule containing calls).
+CACHE_SCHEMA = 2
+
+
 def fingerprint_func(f: FuncOp, extra: tuple = ()) -> str:
     """Structural hash of one function (plus scheduler-option identity)."""
     h = hashlib.sha256()
+    h.update(b"schema%d:" % CACHE_SCHEMA)
     h.update(print_func(f, namer=_StructuralNamer()).encode())
     h.update(repr(extra).encode())
     return h.hexdigest()
@@ -78,6 +91,7 @@ def fingerprint_module(m: Module, extra: tuple = ()) -> str:
     """Structural hash of a whole module: per-function fingerprints in
     definition order (module name excluded — identity is the content)."""
     h = hashlib.sha256()
+    h.update(b"schema%d:" % CACHE_SCHEMA)
     for f in m.funcs.values():
         h.update(f.name.encode())
         h.update(print_func(f, namer=_StructuralNamer()).encode())
@@ -318,6 +332,10 @@ class DSEPoint:
     iis: dict = field(default_factory=dict)
     verified: bool = False
     error: Optional[str] = None
+    #: outcome of the batched cycle-accurate sweep (``sim_verify_front``):
+    #: None = not swept, otherwise every lane matched the oracle or not.
+    batch_verified: Optional[bool] = None
+    batch_vectors: int = 0
 
     def objectives(self) -> Optional[tuple]:
         if self.latency_ns is None or self.error is not None:
@@ -330,7 +348,9 @@ class DSEPoint:
                 "latency_ns": self.latency_ns,
                 "lut": self.lut, "ff": self.ff, "dsp": self.dsp,
                 "bram": self.bram, "iis": self.iis,
-                "verified": self.verified, "error": self.error}
+                "verified": self.verified, "error": self.error,
+                "batch_verified": self.batch_verified,
+                "batch_vectors": self.batch_vectors}
 
 
 def dominates(a: tuple, b: tuple) -> bool:
@@ -429,12 +449,17 @@ def explore_design(module: Module, space: Sequence[DSEConfig],
     scheduled under its knobs, optimized, emitted, resource-scored
     (``report_design``) and — when ``inputs`` are given — simulated for its
     cycle count and verified against ``expected`` (the oracle's output
-    array).  Candidates run on a process pool when ``max_workers > 1``
+    array).  When ``inputs`` are given but ``expected`` is not, the oracle
+    output is computed once through the memoized jax-oracle cache
+    (:func:`oracle_expected`) — structurally identical source modules never
+    re-trace.  Candidates run on a process pool when ``max_workers > 1``
     (serial fallback is byte-identical).  Returns every scored point plus
     the Pareto frontier over (latency_ns, LUT, FF)."""
     from .eraser import erase_schedule
 
     base = erase_schedule(module.clone())
+    if inputs is not None and expected is None:
+        expected = oracle_expected(base, entry, inputs)
     text = print_module(base)
     payloads = [(text, entry, cfg, inputs, expected, pipeline_spec)
                 for cfg in space]
@@ -445,3 +470,312 @@ def explore_design(module: Module, space: Sequence[DSEConfig],
                        verified=r["verified"], error=r["error"])
               for r in rows]
     return DSEResult(points, pareto_front(points))
+
+
+# ---------------------------------------------------------------------------
+# Memoized oracle reference outputs (sim-verification support)
+# ---------------------------------------------------------------------------
+
+#: lowered-oracle callables keyed by source-module fingerprint — re-running
+#: verification for a structurally identical module skips the jax lowering
+#: (trace) entirely.
+_ORACLE_FN_CACHE: OrderedDict = OrderedDict()
+#: reference *outputs* keyed by (fingerprint, input digest) — each Pareto
+#: candidate reuses the exact arrays computed for the first one.
+_ORACLE_OUT_CACHE: OrderedDict = OrderedDict()
+_ORACLE_FN_CAP = 32
+_ORACLE_OUT_CAP = 1024
+ORACLE_STATS = {"fn_hits": 0, "fn_misses": 0,
+                "out_hits": 0, "out_misses": 0}
+
+
+def clear_oracle_cache() -> None:
+    _ORACLE_FN_CACHE.clear()
+    _ORACLE_OUT_CACHE.clear()
+    for k in ORACLE_STATS:
+        ORACLE_STATS[k] = 0
+
+
+def _entry_name(module: Module, entry: Optional[str]) -> str:
+    if entry is not None:
+        return entry
+    names = [f.name for f in module.funcs.values()
+             if not f.attrs.get("external")]
+    if len(names) != 1:
+        raise ValueError(f"ambiguous entry, specify one of {names}")
+    return names[0]
+
+
+def _digest_inputs(inputs: Sequence) -> str:
+    h = hashlib.sha256()
+    for a in inputs:
+        if isinstance(a, np.ndarray):
+            h.update(b"A")
+            h.update(str(a.dtype).encode())
+            h.update(repr(a.shape).encode())
+            h.update(np.ascontiguousarray(a).tobytes())
+        else:
+            h.update(repr(a).encode())
+    return h.hexdigest()
+
+
+def _lru_put(d: OrderedDict, key, val, cap: int) -> None:
+    d[key] = val
+    d.move_to_end(key)
+    while len(d) > cap:
+        d.popitem(last=False)
+
+
+def oracle_expected(module: Module, entry: Optional[str],
+                    inputs: Sequence, result_arg: int = -1) -> np.ndarray:
+    """Reference output of ``module.entry(*inputs)`` for argument
+    ``result_arg``, memoized two ways: the lowered oracle callable is cached
+    by structural fingerprint (no re-trace for the same source module) and
+    the output array by (fingerprint, input digest) (no re-execution for the
+    same stimulus).  Uses the jax lowering (``lower.to_jax``) when jax is
+    importable, the event-driven interpreter otherwise; both caches respect
+    ``REPRO_HLS_CACHE=0``."""
+    from .scheduler import _cache_enabled
+
+    entry = _entry_name(module, entry)
+    f = module.get(entry)
+    rname = f.args[result_arg].name
+    use_cache = _cache_enabled()
+    fp = key = None
+    if use_cache:
+        fp = fingerprint_module(module, extra=("oracle", entry, result_arg))
+        key = (fp, _digest_inputs(inputs))
+        hit = _ORACLE_OUT_CACHE.get(key)
+        if hit is not None:
+            _ORACLE_OUT_CACHE.move_to_end(key)
+            ORACLE_STATS["out_hits"] += 1
+            return np.array(hit, copy=True)
+        ORACLE_STATS["out_misses"] += 1
+
+    fn = _ORACLE_FN_CACHE.get(fp) if use_cache else None
+    if fn is not None:
+        _ORACLE_FN_CACHE.move_to_end(fp)
+        ORACLE_STATS["fn_hits"] += 1
+    else:
+        ORACLE_STATS["fn_misses"] += 1
+        fn = _make_oracle_fn(module, entry, rname)
+        if use_cache:
+            _lru_put(_ORACLE_FN_CACHE, fp, fn, _ORACLE_FN_CAP)
+
+    out = np.asarray(fn(inputs))
+    if use_cache:
+        _lru_put(_ORACLE_OUT_CACHE, key, np.array(out, copy=True),
+                 _ORACLE_OUT_CAP)
+    return out
+
+
+def _make_oracle_fn(module: Module, entry: str, rname: str):
+    """Build the oracle callable on a private clone: jax lowering when
+    available, event-driven fallback otherwise.  The returned closure takes
+    the raw input list and returns the ``rname`` result array."""
+    try:
+        from ..lower.to_jax import lower_to_jax
+
+        jfn = lower_to_jax(module.clone(), entry)
+
+        def run_jax(inputs):
+            outs = jfn(*[np.array(a, copy=True)
+                         if isinstance(a, np.ndarray) else a
+                         for a in inputs])
+            return np.asarray(outs[rname])
+
+        return run_jax
+    except ImportError:
+        src = module.clone()
+
+        def run_event(inputs):
+            from ..lower import simulate
+
+            args = [np.array(a, copy=True)
+                    if isinstance(a, np.ndarray) else a for a in inputs]
+            simulate(src, entry, args)
+            names = [a.name for a in src.get(entry).args]
+            return np.array(args[names.index(rname)], copy=True)
+
+        return run_event
+
+
+# ---------------------------------------------------------------------------
+# Batched (vectorized-simulator) verification of Pareto candidates
+# ---------------------------------------------------------------------------
+
+
+def sim_verify_front(module: Module, result: DSEResult,
+                     entry: Optional[str] = None,
+                     args_batch: Optional[Sequence[np.ndarray]] = None, *,
+                     pipeline_spec: Optional[str] = None,
+                     backend: str = "auto", margin: int = 16) -> int:
+    """Run every Pareto-front candidate through the vectorized cycle-accurate
+    RTL simulator (``core.codegen.sim``) over a whole stimulus batch and
+    check each lane's result array against the memoized oracle of the
+    *source* module.  This upgrades DSE verification from the single
+    ``inputs`` vector of :func:`explore_design` to hundreds of vectors per
+    candidate at batched-simulator throughput.
+
+    ``args_batch`` holds one batch-first array per function argument
+    (``(B, ...)`` for memrefs, ``(B,)`` for scalars — see
+    ``codegen.sim.stack_stimulus``).  Sets ``batch_verified`` /
+    ``batch_vectors`` on each front point and returns the number of
+    candidates in which every lane matched."""
+    from ..codegen.sim import probe_cycles, simulator_for
+    from ..parser import parse
+    from ..passmgr import DEFAULT_PIPELINE_SPEC, PassManager
+    from .eraser import erase_schedule
+    from .scheduler import hls_schedule
+
+    if args_batch is None or not result.front:
+        return 0
+    base = erase_schedule(module.clone())
+    entry = _entry_name(base, entry)
+    nargs = len(base.get(entry).args)
+    batch = [np.asarray(a) for a in args_batch]
+    if len(batch) != nargs:
+        raise ValueError(f"args_batch has {len(batch)} columns, "
+                         f"{entry} takes {nargs}")
+    n_vec = int(batch[0].shape[0])
+
+    def lane(k):
+        return [col[k] if col[k].ndim else int(col[k]) for col in batch]
+
+    expected = np.stack([oracle_expected(base, entry, lane(k))
+                         for k in range(n_vec)])
+    text = print_module(base)
+    spec = DEFAULT_PIPELINE_SPEC if pipeline_spec is None else pipeline_spec
+    n_ok = 0
+    ridx = nargs - 1
+    for point in result.front:
+        m = parse(text)
+        if point.config.merge_banks:
+            merge_local_banks(m)
+        hls_schedule(m, options=point.config.scheduler_options())
+        if spec:
+            PassManager.from_spec(spec).run(m)
+        sim, prepared = simulator_for(m, entry, backend=backend)
+        cycles = probe_cycles(prepared, entry, lane(0), margin=margin)
+        res = sim.run(batch, cycles, batched=True)
+        got = np.asarray(res.arrays[ridx]).reshape(expected.shape)
+        point.batch_verified = bool(np.array_equal(got, expected))
+        point.batch_vectors = n_vec
+        n_ok += point.batch_verified
+    return n_ok
+
+
+# ---------------------------------------------------------------------------
+# Persistent on-disk compile cache
+# ---------------------------------------------------------------------------
+
+
+class DiskCompileCache:
+    """Fingerprint-keyed compile cache that survives process restarts.
+
+    Each entry is one pickle file named by the compile fingerprint holding
+    the *printed* module text plus the per-function netlist summaries
+    ``(name, text, backend, Netlist)`` — never pickled RTL expression trees,
+    whose interned keys (PR 5) are process-local.  Loaded netlists are
+    rebuilt as ``VerilogModule`` with ``rtl=None``; resource reporting and
+    printing only consume ``netlist``/``text``, so warm compiles behave
+    identically (callers needing RTL structure, e.g. the RTL simulator,
+    regenerate it from the module).
+
+    The directory is size-capped: after each ``put`` the oldest entries (by
+    mtime — ``get`` refreshes it, approximating LRU) are evicted until the
+    total drops under ``max_bytes``.  All I/O failures degrade to cache
+    misses so a broken or read-only directory can never fail a compile."""
+
+    def __init__(self, root: str, max_bytes: int = 256 * 10**6):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.max_bytes = max_bytes
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> Path:
+        return self.root / f"{key}.pkl"
+
+    def get(self, key: str):
+        """Returns ``(module, {name: VerilogModule}, meta)`` or None."""
+        from ..codegen.verilog import VerilogModule
+        from ..parser import parse
+
+        p = self._path(key)
+        try:
+            blob = pickle.loads(p.read_bytes())
+            module = parse(blob["module_text"])
+            netlists = {name: VerilogModule(name, text, nl, None, bk)
+                        for name, text, bk, nl in blob["netlists"]}
+            meta = blob["meta"]
+        except Exception:
+            self.misses += 1
+            return None
+        try:
+            os.utime(p)  # refresh recency for eviction
+        except OSError:
+            pass
+        self.hits += 1
+        return module, netlists, meta
+
+    def put(self, key: str, module: Module, netlists: dict,
+            meta: dict) -> None:
+        blob = {"module_text": print_module(module),
+                "netlists": [(v.name, v.text, v.backend, v.netlist)
+                             for v in netlists.values()],
+                "meta": meta}
+        p = self._path(key)
+        tmp = p.with_suffix(f".tmp{os.getpid()}")
+        try:
+            tmp.write_bytes(pickle.dumps(blob, protocol=4))
+            os.replace(tmp, p)
+        except OSError:
+            tmp.unlink(missing_ok=True)
+            return
+        self._evict()
+
+    def _evict(self) -> None:
+        try:
+            files = [(f.stat().st_mtime, f.stat().st_size, f)
+                     for f in self.root.glob("*.pkl")]
+        except OSError:
+            return
+        total = sum(sz for _, sz, _ in files)
+        for _, sz, f in sorted(files):
+            if total <= self.max_bytes:
+                break
+            try:
+                f.unlink()
+                total -= sz
+            except OSError:
+                pass
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self.root.glob("*.pkl"))
+
+    def stats_dict(self) -> dict:
+        return {"entries": len(self), "hits": self.hits,
+                "misses": self.misses}
+
+
+_DISK_CACHE: Optional[DiskCompileCache] = None
+_DISK_CACHE_KEY: Optional[tuple] = None
+
+
+def disk_cache() -> Optional[DiskCompileCache]:
+    """The process-wide on-disk compile cache, or None when
+    ``REPRO_HLS_CACHE_DIR`` is unset.  ``REPRO_HLS_CACHE_MAX_MB`` (default
+    256) caps the directory size.  Re-reads the environment on each call so
+    tests can point it at temporary directories."""
+    global _DISK_CACHE, _DISK_CACHE_KEY
+    root = os.environ.get("REPRO_HLS_CACHE_DIR")
+    if not root:
+        _DISK_CACHE, _DISK_CACHE_KEY = None, None
+        return None
+    mb = float(os.environ.get("REPRO_HLS_CACHE_MAX_MB", "256"))
+    cfg = (root, mb)
+    if _DISK_CACHE is None or _DISK_CACHE_KEY != cfg:
+        _DISK_CACHE = DiskCompileCache(root, max_bytes=int(mb * 10**6))
+        _DISK_CACHE_KEY = cfg
+    return _DISK_CACHE

@@ -52,7 +52,8 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from .. import ir
-from ..analysis import MemTouches, build_dependence_edges
+from ..analysis import (MemTouches, analyze_loops, build_dependence_edges,
+                        op_completion_offset)
 from ..ir import ForOp, FuncOp, Module, Operation, Region, Time, Value
 from ..schedule import (CLOCK_NS, MAX_II, SearchState, balance_delays,
                         recurrence_mii, try_modulo_schedule)
@@ -139,16 +140,19 @@ class HLSScheduler:
 
     # ------------------------------------------------------------------
     def run(self) -> HLSResult:
-        for f in self.module.funcs.values():
-            if f.attrs.get("external"):
-                continue
+        funcs = [f for f in self.module.funcs.values()
+                 if not f.attrs.get("external")]
+        for f in _callee_first(funcs):
+            sync_call_delays(self.module, f)
             self.schedule_func(f)
         return self.result
 
     def schedule_func(self, f: FuncOp) -> HLSResult:
-        """Schedule one function in place (search + pipeline balancing)."""
+        """Schedule one function in place (search + pipeline balancing +
+        result-delay reconciliation)."""
         self._schedule_region(f, f.body, f.time_var, None)
         self.result.delays_inserted += balance_delays(f)
+        self.result.delays_inserted += reconcile_result_delays(self.module, f)
         return self.result
 
     def _latency(self, op: Operation) -> int:
@@ -317,6 +321,109 @@ class HLSScheduler:
         return 0
 
 
+def _callee_first(funcs: list[FuncOp]) -> list[FuncOp]:
+    """Topological order over the intra-module call graph (callees before
+    callers), so every caller is scheduled against its callees' *final*
+    declared result delays.  Cycles (recursion) fall back to input order."""
+    names = {f.name for f in funcs}
+    by_name = {f.name: f for f in funcs}
+    callees = {
+        f.name: sorted({op.attrs["callee"] for op in f.body.walk()
+                        if op.opname == "call"
+                        and op.attrs.get("callee") in names})
+        for f in funcs}
+    order: list[FuncOp] = []
+    done: set[str] = set()
+
+    def visit(name: str, path: frozenset) -> None:
+        if name in done or name in path:
+            return
+        for c in callees[name]:
+            visit(c, path | {name})
+        done.add(name)
+        order.append(by_name[name])
+
+    for f in funcs:
+        visit(f.name, frozenset())
+    return order
+
+
+def sync_call_delays(module: Module, f: FuncOp,
+                     only_callee: Optional[str] = None) -> int:
+    """Refresh ``call`` ops in ``f`` whose callee's declared ``result_delays``
+    changed after the call was built (a reschedule may legitimately bump
+    them — see :func:`reconcile_result_delays`).  Scheduled calls also get
+    their result birth times moved to the new delays.  Returns the number
+    of call sites updated."""
+    n = 0
+    for op in f.body.walk():
+        if op.opname != "call":
+            continue
+        name = op.attrs.get("callee")
+        if only_callee is not None and name != only_callee:
+            continue
+        callee = module.funcs.get(name)
+        if callee is None:
+            continue
+        ds = tuple(callee.attrs.get("result_delays", ()))
+        if ds and tuple(op.attrs.get("result_delays", ())) != ds:
+            op.attrs["result_delays"] = ds
+            if op.start is not None:
+                for r, d in zip(op.results, ds):
+                    r.birth = op.start + d
+            n += 1
+    return n
+
+
+def reconcile_result_delays(module: Module, f: FuncOp) -> int:
+    """Make a freshly scheduled function honour its declared result delays.
+
+    A signature's ``result_delays`` are a hardware interface contract:
+    every call site latches each result exactly ``delay`` cycles after
+    issuing the call.  The schedule search places the body for latency
+    alone, so a returned value can complete *earlier* than declared (the
+    emitted design would stream data ahead of the caller's latch — splice
+    a trailing ``hir.delay`` holding it to the contract) or *later* (the
+    declaration is unachievable at this clock — bump it and refresh every
+    call site in the module; callers scheduled afterwards consume the new
+    delay).  Returns the number of delays inserted."""
+    declared = list(f.attrs.get("result_delays", ()))
+    if not declared:
+        return 0
+    ret = next((op for op in f.body.ops if op.opname == "return"), None)
+    if ret is None or not ret.operands:
+        return 0
+    loops = analyze_loops(f)
+    inserted, bumped = 0, False
+    splice: list[Operation] = []
+    for i, val in enumerate(list(ret.operands)):
+        if i >= len(declared):
+            break
+        dop = val.defining_op
+        ach = (None if dop is None
+               else op_completion_offset(dop, f.time_var, loops))
+        if ach is None:
+            continue
+        if ach < declared[i]:
+            d = ir.delay(val, declared[i] - ach, Time(f.time_var, ach))
+            d.parent_region = f.body
+            splice.append(d)
+            ret.operands[i] = d.result
+            inserted += 1
+        elif ach > declared[i]:
+            declared[i] = ach
+            bumped = True
+    if splice:
+        pos = f.body.ops.index(ret)
+        f.body.ops[pos:pos] = splice
+    if bumped:
+        f.attrs["result_delays"] = tuple(declared)
+        for g in module.funcs.values():
+            if g is not f and not g.attrs.get("external"):
+                sync_call_delays(module, g, only_callee=f.name)
+    return inserted
+
+
 def _cache_enabled() -> bool:
     return os.environ.get("REPRO_HLS_CACHE", "1") != "0"
 
@@ -346,40 +453,69 @@ def hls_schedule(module: Module, pipeline_loops: bool = True,
         cache_obj = dse.SCHEDULE_CACHE if cache is True else cache
 
     funcs = [f for f in module.funcs.values() if not f.attrs.get("external")]
-    todo: list[tuple[FuncOp, Optional[str]]] = []
-    for f in funcs:
-        key = None
-        if cache_obj is not None:
-            key = dse.fingerprint_func(f, extra=opts.key())
-            hit = cache_obj.get(key)
-            if hit is not None:
-                dse.apply_cached_schedule(module, f, hit)
-                _merge_func_meta(result, hit.meta)
-                result.search_cache_hits += 1
-                continue
-            result.search_cache_misses += 1
-        todo.append((f, key))
+    names = {f.name for f in funcs}
+    cross_calls = any(op.attrs.get("callee") in names
+                      for f in funcs for op in f.body.walk()
+                      if op.opname == "call")
 
-    if todo:
-        scheduled = None
-        if max_workers > 1 and len(todo) > 1:
-            scheduled = dse.schedule_funcs_parallel(
-                module, [f.name for f, _ in todo], opts, max_workers)
+    if max_workers > 1 and len(funcs) > 1 and not cross_calls:
+        # flat call graph: no result-delay propagation between these
+        # functions, so the fingerprint pass and the process-pool search
+        # are both safe to run on the pre-schedule module wholesale
+        todo: list[tuple[FuncOp, Optional[str]]] = []
+        for f in funcs:
+            key = None
+            if cache_obj is not None:
+                key = dse.fingerprint_func(f, extra=opts.key())
+                hit = cache_obj.get(key)
+                if hit is not None:
+                    dse.apply_cached_schedule(module, f, hit)
+                    _merge_func_meta(result, hit.meta)
+                    result.search_cache_hits += 1
+                    continue
+                result.search_cache_misses += 1
+            todo.append((f, key))
+        scheduled = (dse.schedule_funcs_parallel(
+            module, [f.name for f, _ in todo], opts, max_workers)
+            if len(todo) > 1 else None)
         if scheduled is not None:
             for (f, key), (text, meta) in zip(todo, scheduled):
                 dse.splice_func_text(module, f.name, text)
                 _merge_func_meta(result, meta)
                 if cache_obj is not None and key is not None:
                     cache_obj.put(key, text, meta)
+            return result
+        # pool unavailable (or a single miss): fall through serially with
+        # the cache lookups above already resolved
+        work = todo
+    else:
+        # serial path: callee-first so each caller is fingerprinted and
+        # scheduled only after its callees' declared delays are final
+        work = None
+
+    for item in (work if work is not None else _callee_first(funcs)):
+        if work is not None:
+            f, key = item
         else:
-            for f, key in todo:
-                s = HLSScheduler(module, options=opts)
-                s.schedule_func(f)
-                meta = _func_meta(s.result)
-                _merge_func_meta(result, meta)
-                if cache_obj is not None and key is not None:
-                    from ..printer import print_func
-                    cache_obj.put(key, print_func(f), meta)
+            f = item
+            sync_call_delays(module, f)
+            key = None
+            if cache_obj is not None:
+                key = dse.fingerprint_func(f, extra=opts.key())
+                hit = cache_obj.get(key)
+                if hit is not None:
+                    dse.apply_cached_schedule(module, f, hit)
+                    _merge_func_meta(result, hit.meta)
+                    result.search_cache_hits += 1
+                    continue
+                result.search_cache_misses += 1
+        s = HLSScheduler(module, options=opts)
+        s.schedule_func(f)
+        meta = _func_meta(s.result)
+        _merge_func_meta(result, meta)
+        if cache_obj is not None and key is not None:
+            from ..printer import print_func
+            cache_obj.put(key, print_func(f), meta)
     return result
 
 
@@ -420,8 +556,11 @@ def hls_compile(module: Module, entry: Optional[str] = None,
 
     Repeated compiles of a structurally-identical module are served from the
     process-wide compile cache (scheduled HIR + netlists keyed by module
-    fingerprint, ``result.from_cache``); set ``cache=False`` or
-    ``REPRO_HLS_CACHE=0`` to disable both cache layers."""
+    fingerprint, ``result.from_cache``); when ``REPRO_HLS_CACHE_DIR`` is
+    set, misses also consult a persistent on-disk cache so warm compiles
+    survive process restarts (size-capped, see ``dse.DiskCompileCache``).
+    Set ``cache=False`` or ``REPRO_HLS_CACHE=0`` to disable every cache
+    layer."""
     from ..codegen import generate_verilog
     from ..passmgr import DEFAULT_PIPELINE_SPEC, AnalysisManager, PassManager
     from ..verifier import verify
@@ -443,6 +582,20 @@ def hls_compile(module: Module, entry: Optional[str] = None,
             for meta in hit.meta["funcs"]:
                 _merge_func_meta(res, meta)
             return res, dict(hit.netlists)
+        disk = dse.disk_cache()
+        if disk is not None:
+            dhit = disk.get(ckey)
+            if dhit is not None:
+                dmod, dnets, dmeta = dhit
+                # promote to the in-memory cache so later compiles in this
+                # process skip the disk round trip too
+                dse.COMPILE_CACHE.put(ckey, dmod, dnets, dmeta)
+                dse.replace_module_contents(module, dmod)
+                res = HLSResult(module, from_cache=True,
+                                search_cache_hits=len(dmeta["funcs"]))
+                for meta in dmeta["funcs"]:
+                    _merge_func_meta(res, meta)
+                return res, dnets
 
     am = AnalysisManager()
     res = hls_schedule(module, options=opts,
@@ -456,6 +609,9 @@ def hls_compile(module: Module, entry: Optional[str] = None,
         res.pass_manager = pm
     vs = generate_verilog(module, entry=entry, am=am, backend=backend)
     if use_cache and ckey is not None:
-        dse.COMPILE_CACHE.put(ckey, module, vs,
-                              {"funcs": [_func_meta(res)]})
+        meta = {"funcs": [_func_meta(res)]}
+        dse.COMPILE_CACHE.put(ckey, module, vs, meta)
+        disk = dse.disk_cache()
+        if disk is not None:
+            disk.put(ckey, module, vs, meta)
     return res, vs

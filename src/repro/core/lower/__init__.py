@@ -1,2 +1,2 @@
-from .to_sim import SimulationError, simulate  # noqa: F401
+from .to_sim import SimulationError, simulate, simulate_batch  # noqa: F401
 from .to_jax import lower_to_jax  # noqa: F401

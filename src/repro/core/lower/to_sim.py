@@ -386,3 +386,40 @@ def simulate(
     place (they model the external memory interfaces).  Returns dict with
     cycle count and scalar returns."""
     return Simulator(module, externals, check_conflicts).run(func, args)
+
+
+def simulate_batch(
+    module: Module,
+    func: str,
+    args_batch: Sequence[Any],
+    check_conflicts: bool = True,
+) -> tuple[list[dict], list[Optional[np.ndarray]]]:
+    """Event-driven baseline over a batch-first stimulus set: one
+    ``simulate`` call per lane.  This is the per-vector reference path the
+    vectorized RTL simulator (``codegen.sim``) is measured against — and the
+    slow half of the differential harness.
+
+    ``args_batch`` holds one ``(B, *shape)`` array per memref argument and
+    ``(B,)`` arrays (or plain ints, broadcast) for scalar arguments.
+    Returns ``(results, finals)``: the per-lane ``simulate`` result dicts and
+    the final batch-first contents of each memref argument (None for
+    scalars).  Unlike ``simulate``, the stimulus arrays are never mutated."""
+    f = module.get(func)
+    cols = [np.asarray(a) for a in args_batch]
+    B = int(cols[0].shape[0]) if cols else 1
+    results: list[dict] = []
+    finals: list[list] = [[] for _ in cols]
+    for k in range(B):
+        lane: list[Any] = []
+        for a, col in zip(f.args, cols):
+            if isinstance(a.type, MemrefType):
+                lane.append(np.array(col[k], copy=True))
+            else:
+                lane.append(int(col[k]) if col.ndim else int(col))
+        results.append(
+            simulate(module, func, lane, check_conflicts=check_conflicts))
+        for i, (a, v) in enumerate(zip(f.args, lane)):
+            if isinstance(a.type, MemrefType):
+                finals[i].append(v)
+    stacked = [np.stack(c) if c else None for c in finals]
+    return results, stacked

@@ -1,0 +1,47 @@
+"""benchmarks/run.py orchestration contract: ``--only``/``--skip``
+filtering, flag passthrough, and nonzero exit when a benchmark fails (the
+CI perf-smoke step gates on the exit status)."""
+
+import pytest
+
+bench_run = pytest.importorskip("benchmarks.run")
+
+ALL = ("codegen_speed,codegen_scaling,dse,resource_usage,precision_opt,"
+       "roofline,sim_throughput")
+
+
+def test_split_opt_consumes_both_forms():
+    argv = ["--only", "a,b", "x", "--skip=c"]
+    only = bench_run._split_opt(argv, "--only")
+    skip = bench_run._split_opt(argv, "--skip")
+    assert only == {"a", "b"}
+    assert skip == {"c"}
+    assert argv == ["x"]
+
+
+def test_unknown_benchmark_name_is_an_error():
+    assert bench_run.main(["definitely_not_a_benchmark"]) == 2
+    assert bench_run.main(["--only", "definitely_not_a_benchmark"]) == 2
+
+
+def test_skip_everything_runs_nothing():
+    assert bench_run.main(["--skip", ALL]) == 0
+
+
+def test_failing_benchmark_turns_exit_nonzero(monkeypatch):
+    import benchmarks.roofline as roofline
+
+    def boom():
+        raise RuntimeError("kaput")
+
+    monkeypatch.setattr(roofline, "main", boom)
+    assert bench_run.main(["--only", "roofline"]) == 1
+
+
+def test_only_filter_selects_single_suite(monkeypatch):
+    import benchmarks.roofline as roofline
+
+    calls = []
+    monkeypatch.setattr(roofline, "main", lambda: calls.append(1) or 0)
+    assert bench_run.main(["--only", "roofline"]) == 0
+    assert calls == [1]

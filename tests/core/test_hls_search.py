@@ -272,6 +272,8 @@ def test_cache_kill_switch(monkeypatch):
 
 
 def test_parallel_schedule_matches_serial():
+    # gemm calls mac, so result-delay reconciliation forces the serial
+    # callee-first path even at max_workers=2 — both runs must agree
     m, _ = GALLERY["gemm"].build()
     erased = erase_schedule(m)
     ma, mb = erased.clone(), erased.clone()
@@ -279,3 +281,46 @@ def test_parallel_schedule_matches_serial():
     rb = hls_schedule(mb, max_workers=2)
     assert ra.iis == rb.iis and ra.miis == rb.miis
     assert _structural(ma) == _structural(mb)
+
+
+def test_parallel_schedule_matches_serial_flat_module():
+    # a module whose functions never call each other takes the process-pool
+    # path; output must be byte-identical to the serial schedule
+    src_a = print_module(erase_schedule(GALLERY["array_add"].build(n=8)[0]))
+    src_b = print_module(erase_schedule(GALLERY["transpose"].build(n=4)[0]))
+    merged = src_a + "\n" + src_b
+    ma, mb = parse(merged), parse(merged)
+    ra = hls_schedule(ma, max_workers=1)
+    rb = hls_schedule(mb, max_workers=2)
+    assert ra.iis == rb.iis and ra.miis == rb.miis
+    assert _structural(ma) == _structural(mb)
+
+
+def test_result_delay_padded_to_declaration():
+    # at a 10 ns clock stencil_op's body completes one cycle before its
+    # declared result delay: the call site latches exactly `delay` cycles
+    # after issue, so the reschedule must hold the returned value to the
+    # declared cycle with a trailing hir.delay instead of streaming early
+    m, _ = GALLERY["stencil1d"].build(n=8)
+    um = erase_schedule(m)
+    hls_schedule(um, options=SchedulerOptions(clock_ns=10.0))
+    f = um.funcs["stencil_op"]
+    assert tuple(f.attrs["result_delays"]) == (1,)
+    ret = next(op for op in f.body.ops if op.opname == "return")
+    d = ret.operands[0].defining_op
+    assert d is not None and d.opname == "delay"
+
+
+def test_result_delay_bumped_and_call_sites_synced():
+    # at a 5 ns clock mac's chained multiply-add needs one pipeline stage
+    # more than gemm's zero-delay declaration allows; the declaration is
+    # bumped and every call site refreshed before gemm itself is scheduled
+    m, _ = GALLERY["gemm"].build(n=4)
+    um = erase_schedule(m)
+    hls_schedule(um, options=SchedulerOptions(clock_ns=5.0))
+    ds = tuple(um.funcs["mac"].attrs["result_delays"])
+    assert ds and ds[0] >= 1
+    calls = [op for f in um.funcs.values() for op in f.body.walk()
+             if op.opname == "call" and op.attrs.get("callee") == "mac"]
+    assert calls
+    assert all(tuple(c.attrs["result_delays"]) == ds for c in calls)

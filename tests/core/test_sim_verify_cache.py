@@ -1,0 +1,157 @@
+"""Tests for the DSE sim-verification additions and the persistent compile
+cache: memoized jax-oracle reference outputs, ``explore_design``
+auto-expected, batched Pareto-front verification on the vectorized
+simulator, and the ``REPRO_HLS_CACHE_DIR`` on-disk compile cache."""
+
+import numpy as np
+import pytest
+
+from repro.core.gallery import array_add, gemm
+from repro.core.hls import dse
+from repro.core.hls.scheduler import hls_compile
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    dse.clear_oracle_cache()
+    dse.COMPILE_CACHE.clear()
+    yield
+    dse.clear_oracle_cache()
+    dse.COMPILE_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# Memoized oracle
+# ---------------------------------------------------------------------------
+
+
+def test_oracle_expected_matches_kernel_oracle():
+    mod, entry = array_add.build(n=8)
+    inputs = array_add.make_inputs(n=8, seed=4)
+    got = dse.oracle_expected(mod, entry, inputs)
+    want = array_add.oracle(inputs[0], inputs[1])
+    assert np.array_equal(got.astype(np.int64), want.astype(np.int64))
+
+
+def test_oracle_outputs_are_memoized():
+    mod, entry = array_add.build(n=8)
+    inputs = array_add.make_inputs(n=8, seed=4)
+    dse.oracle_expected(mod, entry, inputs)
+    s0 = dict(dse.ORACLE_STATS)
+    out = dse.oracle_expected(mod, entry, inputs)
+    assert dse.ORACLE_STATS["out_hits"] == s0["out_hits"] + 1
+    # a structurally identical *rebuild* hits the fn cache (no re-trace)
+    mod2, _ = array_add.build(n=8)
+    inputs2 = array_add.make_inputs(n=8, seed=9)
+    dse.oracle_expected(mod2, entry, inputs2)
+    assert dse.ORACLE_STATS["fn_hits"] >= 1
+    # cached arrays are private copies
+    out[:] = -1
+    fresh = dse.oracle_expected(mod, entry, inputs)
+    assert not np.array_equal(out, fresh)
+
+
+def test_oracle_cache_disabled_by_env(monkeypatch):
+    monkeypatch.setenv("REPRO_HLS_CACHE", "0")
+    mod, entry = array_add.build(n=8)
+    inputs = array_add.make_inputs(n=8, seed=4)
+    dse.oracle_expected(mod, entry, inputs)
+    dse.oracle_expected(mod, entry, inputs)
+    assert dse.ORACLE_STATS["out_hits"] == 0
+    assert dse.ORACLE_STATS["fn_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# explore_design auto-expected + batched front verification
+# ---------------------------------------------------------------------------
+
+
+def test_explore_design_auto_expected_verifies():
+    mod, entry = array_add.build(n=8)
+    inputs = array_add.make_inputs(n=8, seed=2)
+    space = dse.design_space(pipeline=(True, False))
+    res = dse.explore_design(mod, space, entry=entry, inputs=inputs)
+    assert res.front, [p.error for p in res.points]
+    assert all(p.verified for p in res.front)
+
+
+def test_sim_verify_front_batched():
+    from repro.core.codegen.sim import stack_stimulus
+
+    mod, entry = array_add.build(n=8)
+    inputs = array_add.make_inputs(n=8, seed=2)
+    space = dse.design_space(pipeline=(True, False))
+    res = dse.explore_design(mod, space, entry=entry, inputs=inputs)
+    batch = stack_stimulus(array_add.make_inputs, 32, base_seed=50, n=8)
+    n_ok = dse.sim_verify_front(mod, res, entry=entry, args_batch=batch)
+    assert n_ok == len(res.front) > 0
+    for p in res.front:
+        assert p.batch_verified is True
+        assert p.batch_vectors == 32
+        assert p.as_dict()["batch_verified"] is True
+
+
+# ---------------------------------------------------------------------------
+# Persistent on-disk compile cache
+# ---------------------------------------------------------------------------
+
+
+def test_disk_cache_round_trips_compile(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_HLS_CACHE_DIR", str(tmp_path))
+    mod, entry = gemm.build(n=4)
+    r1, v1 = hls_compile(mod.clone(), entry=entry)
+    assert not r1.from_cache
+    assert len(dse.disk_cache()) == 1
+    # fresh process simulated by clearing the in-memory layer
+    dse.COMPILE_CACHE.clear()
+    r2, v2 = hls_compile(mod.clone(), entry=entry)
+    assert r2.from_cache
+    assert v2.keys() == v1.keys()
+    for k in v1:
+        assert v1[k].text == v2[k].text
+        assert v2[k].rtl is None  # RTL trees are never pickled
+        assert v1[k].netlist == v2[k].netlist
+    # resource reports survive the rtl=None reload
+    from repro.core.codegen.resources import report_design
+    a, b = report_design(v1, entry=entry), report_design(v2, entry=entry)
+    assert (a.lut, a.ff, a.dsp, a.bram) == (b.lut, b.ff, b.dsp, b.bram)
+    # the disk hit also re-populated the in-memory cache
+    assert len(dse.COMPILE_CACHE) == 1
+
+
+def test_disk_cache_unset_means_disabled(monkeypatch):
+    monkeypatch.delenv("REPRO_HLS_CACHE_DIR", raising=False)
+    assert dse.disk_cache() is None
+
+
+def test_disk_cache_tolerates_corrupt_entries(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_HLS_CACHE_DIR", str(tmp_path))
+    dc = dse.disk_cache()
+    (tmp_path / "deadbeef.pkl").write_bytes(b"not a pickle")
+    assert dc.get("deadbeef") is None
+    assert dc.misses == 1
+
+
+def test_disk_cache_size_cap_evicts_oldest(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_HLS_CACHE_DIR", str(tmp_path))
+    mod, entry = array_add.build(n=8)
+    r, vs = hls_compile(mod.clone(), entry=entry)
+    dc = dse.disk_cache()
+    entry_bytes = sum(f.stat().st_size for f in tmp_path.glob("*.pkl"))
+    # cap at ~2 entries, then insert 4 distinct keys
+    dc.max_bytes = int(entry_bytes * 2.5)
+    import time
+    for i in range(4):
+        dc.put(f"key{i:02d}", mod, vs, {"funcs": []})
+        time.sleep(0.01)  # distinct mtimes for deterministic eviction
+    files = sorted(f.name for f in tmp_path.glob("*.pkl"))
+    assert len(files) <= 3  # cap enforced
+    assert "key03.pkl" in files  # newest survives
+
+
+def test_disk_cache_respects_global_kill_switch(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_HLS_CACHE_DIR", str(tmp_path))
+    monkeypatch.setenv("REPRO_HLS_CACHE", "0")
+    mod, entry = gemm.build(n=4)
+    hls_compile(mod.clone(), entry=entry)
+    assert len(list(tmp_path.glob("*.pkl"))) == 0
