@@ -11,13 +11,21 @@ oracle.  The result is the full scored point cloud plus the Pareto frontier
 over (latency_ns, LUT, FF); non-verifying or erroring candidates are kept in
 the cloud (with their error) but never reach the frontier.
 
+Each kernel is swept twice: exhaustively, and with the adaptive
+``strategy="halving"`` explorer (cheap schedule-only scoring of the full
+pool, full compile+verify of the surviving half) — the artifact records
+whether both reach the same verified Pareto front and how many full
+evaluations halving saved.
+
 Candidates run on a process pool with ``--workers N`` (serial at 1, the
 default — results are identical either way).  ``--smoke`` shrinks the space
 to a handful of candidates for CI.  ``main()`` writes
 ``artifacts/bench/BENCH_dse.json``::
 
     {"kernels": {gemm: {"points": [...], "pareto_front": [...],
-                        "n_verified": int, "wall_s": float}, conv2d: ...},
+                        "n_verified": int, "wall_s": float,
+                        "halving": {"stats": {...}, "front_equal": bool,
+                                    "wall_s": float}}, conv2d: ...},
      "space_axes": {...}, "workers": N}
 """
 
@@ -51,6 +59,7 @@ SPACE_AXES = {
     "clock_ns": (10.0, 5.0, 2.5),
     "unroll_parallel": (True, False),
     "merge_banks": (False, True),
+    "tile": (0, 2),
 }
 
 SMOKE_AXES = {
@@ -59,6 +68,7 @@ SMOKE_AXES = {
     "clock_ns": (10.0, 5.0, 2.5),
     "unroll_parallel": (True,),
     "merge_banks": (False, True),
+    "tile": (0, 2),
 }
 
 
@@ -73,15 +83,29 @@ def run(kernels=None, axes=None, workers: int = 1) -> dict:
         expected = gal.oracle(*inputs[:nargs])
         space = design_space(**axes)
         t0 = time.perf_counter()
-        res = explore_design(module, space, entry=entry, inputs=inputs,
+        res = explore_design(module, space, entry=entry,
+                             inputs=[a.copy() for a in inputs],
                              expected=expected, max_workers=workers)
         wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res_h = explore_design(module, space, entry=entry,
+                               inputs=[a.copy() for a in inputs],
+                               expected=expected, max_workers=workers,
+                               strategy="halving")
+        wall_h = time.perf_counter() - t0
+        front = lambda r: sorted(repr(p.config.as_dict()) for p in r.front)
         out[name] = {
             **res.as_dict(),
             "n_points": len(res.points),
             "n_verified": sum(p.verified for p in res.points),
             "n_front": len(res.front),
             "wall_s": round(wall, 2),
+            "halving": {
+                "stats": res_h.stats,
+                "front_equal": front(res_h) == front(res),
+                "n_front": len(res_h.front),
+                "wall_s": round(wall_h, 2),
+            },
         }
     return out
 
@@ -110,12 +134,17 @@ def main(json_out: bool = False, kernels=None, workers: int = 1,
             knobs = (f"pipeline={cfg['pipeline']} min_ii={cfg['min_ii']} "
                      f"clock={cfg['clock_ns']}ns "
                      f"stagger={cfg['unroll_parallel']} "
-                     f"merge_banks={cfg['merge_banks']}")
+                     f"merge_banks={cfg['merge_banks']} "
+                     f"tile={cfg.get('tile', 0)}")
             print(f"  {p['latency_ns']:10.1f} {p['lut']:6d} {p['ff']:6d}  "
                   f"{knobs}")
         errs = [p for p in row["points"] if p["error"]]
         if errs:
             print(f"  ({len(errs)} candidates errored out)")
+        h = row["halving"]
+        print(f"  halving: {h['stats']['n_full']}/{h['stats']['n_candidates']}"
+              f" full evaluations ({h['stats']['evaluations_saved']} saved), "
+              f"front_equal={h['front_equal']}, {h['wall_s']}s")
     return payload
 
 

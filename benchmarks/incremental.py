@@ -1,0 +1,156 @@
+"""Incremental-compilation benchmark (PR 8): per-function warm
+recompilation and pooled backend emission.
+
+Three measurements per swept gemm size, all in hierarchical
+(``hierarchy="modules"``) emission:
+
+  * **cold** — every cache layer empty, full schedule + codegen;
+  * **warm module hit** — recompiling a structurally identical build is
+    served whole from the compile cache;
+  * **warm re-edit** — one callee (``mac``) is structurally edited: the
+    whole-module layer misses, but every untouched function's scheduled HIR
+    and lowered RTL is spliced from ``dse.FUNC_CODEGEN_CACHE``, so only the
+    edited function recompiles.  The emitted netlists are checked
+    byte-identical against a caches-off compile of the same edited module.
+
+Plus a serial-vs-pooled ``generate_verilog(max_workers=N)`` emission timing
+on the same design (identical output by construction; wall-clock only wins
+once per-module emission outweighs process-pool startup, so small designs
+honestly report a slowdown).
+
+``main()`` writes ``artifacts/bench/BENCH_incremental.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+
+from repro.core.codegen.verilog import generate_verilog
+from repro.core.gallery import gemm
+from repro.core.hls import dse
+from repro.core.hls.scheduler import hls_compile
+
+ARTIFACT = (Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+            / "BENCH_incremental.json")
+
+
+def _clear_caches() -> None:
+    dse.SCHEDULE_CACHE.clear()
+    dse.COMPILE_CACHE.clear()
+    dse.FUNC_CODEGEN_CACHE.clear()
+
+
+def _edit_mac(m):
+    for op in m.funcs["mac"].body.ops:
+        if op.opname == "add":
+            op.opname = "sub"
+            return m
+    raise AssertionError("no add op in mac")
+
+
+def _netlists_equal(a, b) -> bool:
+    return set(a) == set(b) and all(
+        a[k].text == b[k].text and a[k].netlist == b[k].netlist for k in a)
+
+
+def bench_reedit(n: int) -> dict:
+    """Cold vs warm-module-hit vs warm-single-function-re-edit at gemm
+    ``n`` (an n x n systolic array calling one shared ``mac``)."""
+    _clear_caches()
+    entry = "gemm"
+    t0 = time.perf_counter()
+    hls_compile(gemm.build(n)[0], entry=entry, hierarchy="modules")
+    cold_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    r2, _ = hls_compile(gemm.build(n)[0], entry=entry, hierarchy="modules")
+    warm_hit_s = time.perf_counter() - t0
+    assert r2.from_cache
+
+    h0 = dse.FUNC_CODEGEN_CACHE.hits
+    t0 = time.perf_counter()
+    _, vs = hls_compile(_edit_mac(gemm.build(n)[0]), entry=entry,
+                        hierarchy="modules")
+    reedit_s = time.perf_counter() - t0
+    func_hits = dse.FUNC_CODEGEN_CACHE.hits - h0
+
+    os.environ["REPRO_HLS_CACHE"] = "0"
+    try:
+        _, vs_cold = hls_compile(_edit_mac(gemm.build(n)[0]), entry=entry,
+                                 hierarchy="modules")
+    finally:
+        del os.environ["REPRO_HLS_CACHE"]
+
+    return {
+        "kernel": "gemm", "n": n,
+        "cold_s": round(cold_s, 4),
+        "warm_module_hit_s": round(warm_hit_s, 4),
+        "warm_reedit_s": round(reedit_s, 4),
+        "reedit_speedup": round(cold_s / reedit_s, 1) if reedit_s else None,
+        "func_cache_hits": func_hits,
+        "byte_identical": _netlists_equal(vs, vs_cold),
+    }
+
+
+def bench_parallel_emit(n: int, workers: int) -> dict:
+    t0 = time.perf_counter()
+    vs_s = generate_verilog(gemm.build(n)[0], entry="gemm",
+                            hierarchy="modules")
+    serial_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vs_p = generate_verilog(gemm.build(n)[0], entry="gemm",
+                            hierarchy="modules", max_workers=workers)
+    parallel_s = time.perf_counter() - t0
+    return {
+        "kernel": "gemm", "n": n, "workers": workers,
+        "n_modules": len(vs_s),
+        "emit_serial_s": round(serial_s, 4),
+        "emit_parallel_s": round(parallel_s, 4),
+        "emit_equal": _netlists_equal(vs_s, vs_p),
+    }
+
+
+def main(json_out: bool = False, sizes=None, workers: int = 0,
+         smoke: bool = False, artifact: bool = True) -> dict:
+    sizes = tuple(sizes) if sizes else ((4,) if smoke else (8, 16))
+    workers = workers or min(4, os.cpu_count() or 1)
+    reedit = [bench_reedit(n) for n in sizes]
+    emit = [bench_parallel_emit(max(sizes), workers)]
+    payload = {"reedit": reedit, "parallel_emit": emit}
+    if artifact:
+        ARTIFACT.parent.mkdir(parents=True, exist_ok=True)
+        ARTIFACT.write_text(json.dumps(payload, indent=2))
+    if json_out:
+        print(json.dumps(payload, indent=2))
+        return payload
+    for r in reedit:
+        print(f"gemm n={r['n']:3d}: cold {r['cold_s']:.3f}s, "
+              f"module-hit {r['warm_module_hit_s']:.3f}s, "
+              f"re-edit {r['warm_reedit_s']:.3f}s "
+              f"({r['reedit_speedup']}x, {r['func_cache_hits']} func hits, "
+              f"byte_identical={r['byte_identical']})")
+    for r in emit:
+        print(f"emit gemm n={r['n']} ({r['n_modules']} modules): serial "
+              f"{r['emit_serial_s']:.3f}s, x{r['workers']} pool "
+              f"{r['emit_parallel_s']:.3f}s, equal={r['emit_equal']}")
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true", help="emit payload as JSON")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated gemm sizes (default 8,16)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="emission pool width (default min(4, cpus))")
+    ap.add_argument("--smoke", action="store_true", help="small CI config")
+    ap.add_argument("--no-artifact", action="store_true",
+                    help="skip writing artifacts/bench/BENCH_incremental.json")
+    args = ap.parse_args()
+    sizes = [int(s) for s in args.sizes.split(",")] if args.sizes else None
+    main(json_out=args.json, sizes=sizes, workers=args.workers,
+         smoke=args.smoke, artifact=not args.no_artifact)

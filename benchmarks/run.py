@@ -3,6 +3,7 @@ report mandated by the assignment:
 
   codegen_speed    paper Table 6 (HIR vs HLS codegen time)
   dse              Pareto-front design-space exploration (gemm, conv2d)
+  incremental      per-function warm recompilation + pooled emission
   resource_usage   paper Table 5 (LUT/FF/DSP/BRAM per kernel)
   precision_opt    paper Table 4 (precision-opt ablation)
   roofline         EXPERIMENTS §Roofline source (reads dry-run artifacts)
@@ -58,13 +59,14 @@ def main(argv=None) -> int:
         argv = [a for a in argv if a != "--profile"]
     only = _split_opt(argv, "--only")
     skip = _split_opt(argv, "--skip")
-    from . import (codegen_scaling, codegen_speed, dse, precision_opt,
-                   resource_usage, roofline, sim_throughput)
+    from . import (codegen_scaling, codegen_speed, dse, incremental,
+                   precision_opt, resource_usage, roofline, sim_throughput)
 
     suites = {
         "codegen_speed": codegen_speed,
         "codegen_scaling": codegen_scaling,
         "dse": dse,
+        "incremental": incremental,
         "resource_usage": resource_usage,
         "precision_opt": precision_opt,
         "roofline": roofline,

@@ -1488,3 +1488,116 @@ def get_printer(backend: str) -> NetlistPrinter:
         raise ValueError(
             f"unknown backend {backend!r}; expected one of "
             f"{sorted(BACKENDS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Parallel per-module emission (PR 8)
+# ---------------------------------------------------------------------------
+
+
+def _walk_ops(m, visit) -> None:
+    """Visit every FuncOp/Operation of ``m`` in deterministic print order
+    (funcs in module order, ops pre-order through nested regions)."""
+    def rec(region):
+        for op in region.ops:
+            visit(op)
+            for r in op.regions:
+                rec(r)
+
+    for f in m.funcs.values():
+        visit(f)
+        if not f.attrs.get("external"):
+            rec(f.body)
+
+
+def _op_values(op) -> list:
+    vals = list(op.results)
+    for reg in op.regions:
+        vals.extend(reg.args)
+    return vals
+
+
+def _module_sidecar(m) -> list:
+    """Per-op ``(loc, value-names)`` sidecar, in ``_walk_ops`` order.  The
+    HIR printer neither serializes source locations nor preserves raw value
+    names (duplicates are legalized ``lj`` -> ``lj_1``, anonymous values
+    print as ``v<id>`` with a process-local id), and both feed the RTL
+    backends — locs as netlist comments, names through ``FuncLowering``'s
+    signal naming.  Parallel-emission payloads carry this sidecar so workers
+    reconstruct the parent's exact in-memory module after parsing."""
+    out = []
+
+    def visit(op):
+        out.append((op.loc, tuple(v.name for v in _op_values(op))))
+
+    _walk_ops(m, visit)
+    return out
+
+
+def _attach_sidecar(m, sidecar) -> None:
+    """Re-attach a ``_module_sidecar`` onto a parsed module.  The print/parse
+    round trip preserves the op tree exactly, so the same deterministic walk
+    pairs ops 1:1 with the sidecar — keeping emitted text byte-identical to
+    the serial path."""
+    it = iter(sidecar)
+
+    def put(op):
+        loc, names = next(it)
+        op.loc = loc
+        vals = _op_values(op)
+        if len(vals) != len(names):  # pragma: no cover - round-trip invariant
+            raise RuntimeError(f"sidecar mismatch at {op.opname}")
+        for v, nm in zip(vals, names):
+            v.name = nm
+
+    _walk_ops(m, put)
+
+
+def _emit_module_payload(payload) -> tuple:
+    """Pool worker: re-lower and print ONE emitted module from printed HIR
+    text.  Top-level by necessity (the pool pickles the callable by
+    reference); the payload carries text and plain config only — never RTL
+    trees, whose interned expression keys (PR 5) are process-local.
+
+    Byte-identity with the serial path holds because (a) ``FuncLowering``'s
+    anonymous naming is positional per lowering, (b) the RTL passes are
+    strictly per-module, and (c) the design-wide module name map is rebuilt
+    from the full ordered name list the parent passes in, so the printer's
+    first-come legalization sees the same sequence."""
+    module_text, sidecar, target, order, hierarchy, rtl_spec, backend = payload
+    from ..parser import parse
+    from ..passmgr import PassManager
+    from .verilog import lower_to_rtl, netlist_of
+
+    m = parse(module_text)
+    _attach_sidecar(m, sidecar)
+    design = lower_to_rtl(m, [target], hierarchy=hierarchy)
+    if rtl_spec:
+        PassManager.from_spec(rtl_spec).run(design)
+    printer = get_printer(backend)
+    modmap = printer.module_name_map(order)
+    tm = design.modules[target]
+    text = printer.print_module(tm, modmap=modmap, design=design)
+    return target, text, netlist_of(tm)
+
+
+def emit_design_parallel(module, order: list, hierarchy: str,
+                         rtl_spec, backend: str,
+                         max_workers: int):
+    """Emit the design's modules concurrently, one pool task per emitted
+    module: each worker parses the printed post-pipeline module, lowers its
+    target (plus, hierarchically, the callees the target instantiates), runs
+    the RTL pass pipeline and prints the target.  Results come back as
+    ``[(name, text, netlist), ...]`` in ``order`` — the same deterministic
+    order the serial loop produces — or ``None`` when no pool is available
+    (the caller then falls back to the byte-identical serial path)."""
+    from ..pool import pool_map
+    from ..printer import print_module
+
+    text = print_module(module)
+    sidecar = _module_sidecar(module)
+    payloads = [(text, sidecar, t, tuple(order), hierarchy, rtl_spec or "",
+                 backend)
+                for t in order]
+    return pool_map(_emit_module_payload, payloads, max_workers,
+                    label="backend emission")

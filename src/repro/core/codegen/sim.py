@@ -930,6 +930,42 @@ def stack_stimulus(make_inputs: Callable[..., list], n_vectors: int,
     return [np.stack(c).astype(I64) for c in cols]
 
 
+def fold_in_stimulus(widths: Sequence[int], n_lanes: int,
+                     seed: int = 0) -> list[np.ndarray]:
+    """Per-lane random stimulus from jax-native counter-based PRNG streams:
+    one scalar per (input, lane), each drawn from an independent stream
+    derived by ``jax.random.fold_in(fold_in(key(seed), input), lane)`` and
+    masked to the input's bit width.  Unlike sequential generators, fold_in
+    streams are stable under lane/input reordering — adding a lane never
+    perturbs the values the existing lanes see, so seed-pinned differential
+    suites stay reproducible as they grow.  Falls back to equivalent-shape
+    ``numpy.random.SeedSequence`` spawn streams when jax is absent (values
+    differ across the two generators; each is deterministic per seed)."""
+    masks = [(1 << min(int(w), 63)) - 1 for w in widths]
+    out: list[np.ndarray] = []
+    if HAVE_JAX:
+        key = jax.random.key(seed) if hasattr(jax.random, "key") \
+            else jax.random.PRNGKey(seed)
+        for i, mask in enumerate(masks):
+            ki = jax.random.fold_in(key, i)
+            lanes = []
+            for lane in range(n_lanes):
+                kl = jax.random.fold_in(ki, lane)
+                hi, lo = (int(b) for b in
+                          jax.random.bits(kl, (2,), dtype=jnp.uint32))
+                lanes.append(((hi << 32) | lo) & mask)
+            out.append(np.asarray(lanes, dtype=I64))
+        return out
+    for i, mask in enumerate(masks):
+        lanes = []
+        for lane in range(n_lanes):
+            rng = np.random.default_rng(
+                np.random.SeedSequence(entropy=seed, spawn_key=(i, lane)))
+            lanes.append(int(rng.integers(0, 1 << 63, dtype=np.int64)) & mask)
+        out.append(np.asarray(lanes, dtype=I64))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Differential verification harness
 # ---------------------------------------------------------------------------

@@ -29,9 +29,11 @@ against an expected oracle array, and returns the Pareto frontier over
 from __future__ import annotations
 
 import hashlib
+import math
 import os
 import pickle
 import re
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -40,7 +42,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .. import ir
-from ..ir import FuncOp, Module
+from ..ir import FuncOp, Module, clone_func
+from ..pool import pool_map
 from ..printer import _Namer, print_func, print_module
 from ..schedule import CLOCK_NS
 from .scheduler import HLSScheduler, SchedulerOptions, _func_meta
@@ -108,6 +111,12 @@ def fingerprint_module(m: Module, extra: tuple = ()) -> str:
 class CacheEntry:
     text: str   # printed scheduled function
     meta: dict  # HLSResult fragment (iis / miis / probes / counters)
+    #: scheduled FuncOp (private clone).  The serial scheduler stores it so
+    #: hits splice a clone instead of re-parsing ``text`` — the print/parse
+    #: round trip drops source locations, which surface in emitted netlist
+    #: comments and would break warm-vs-cold byte-identity.  Pool workers
+    #: can only ship text, so parallel-path entries leave this None.
+    func: Optional[FuncOp] = None
 
 
 @dataclass
@@ -143,8 +152,12 @@ class ScheduleCache:
             self._d.popitem(last=False)
 
     @staticmethod
-    def _make_entry(text: str, meta: dict) -> CacheEntry:
-        return CacheEntry(text, meta)
+    def _make_entry(text: str, meta: dict,
+                    func: Optional[FuncOp] = None) -> CacheEntry:
+        from ..ir import clone_func
+
+        return CacheEntry(text, meta,
+                          None if func is None else clone_func(func))
 
     def clear(self) -> None:
         self._d.clear()
@@ -164,19 +177,64 @@ class CompileCache(ScheduleCache):
     def _make_entry(module: Module, netlists: dict, meta: dict) -> CompileEntry:
         # Clone at insert time so later caller mutations can't corrupt the
         # entry; hits hand out fresh clones (an order of magnitude cheaper
-        # than re-parsing the post-unroll module text).
-        return CompileEntry(module.clone(), dict(netlists), meta)
+        # than re-parsing the post-unroll module text).  Functions flagged
+        # ``_cache_owned`` are already immutable clones owned by the
+        # per-function codegen cache (spliced in on incremental hits, shared
+        # under the read-only compiled-module contract) — sharing them keeps
+        # the warm re-edit put cost proportional to the *edited* functions
+        # instead of the whole post-unroll design.
+        m = Module(module.name)
+        for name, f in module.funcs.items():
+            m.funcs[name] = (f if getattr(f, "_cache_owned", False)
+                             else clone_func(f))
+        return CompileEntry(m, dict(netlists), meta)
 
 
-#: process-wide default caches (``REPRO_HLS_CACHE=0`` bypasses both)
+@dataclass
+class FuncCodegenEntry:
+    func: FuncOp    # post-pipeline (inlined/unrolled) function, private copy
+    rtl: object     # lowered RTLModule, private copy (exprs shared, immutable)
+    text: str       # printed backend text under the design's legalized names
+    netlist: object  # Netlist summary consumed by resource reporting
+
+
+class FuncCodegenCache(ScheduleCache):
+    """Per-function codegen memo (incremental recompilation, PR 8): entries
+    carry everything downstream of the pass pipeline for one function — the
+    post-pipeline HIR, its lowered ``RTLModule``, and the printed backend
+    text + netlist — keyed by the function's structural fingerprint *plus*
+    the full codegen context (pipeline spec, hierarchy, backend, RTL spec,
+    scheduler options and the design's module-name list, which pins the
+    printer's first-come name legalization).  Hits are handed out shared:
+    compiled functions are consumed read-only downstream, mirroring
+    :func:`replace_module_contents`; ``_make_entry`` clones at insert so
+    later caller mutations can't corrupt the entry."""
+
+    @staticmethod
+    def _make_entry(func: FuncOp, rtl, text: str, netlist) -> FuncCodegenEntry:
+        from ..ir import clone_func
+
+        f = clone_func(func)
+        f._cache_owned = True  # see CompileCache._make_entry
+        return FuncCodegenEntry(f, rtl.copy(), text, netlist)
+
+
+#: process-wide default caches (``REPRO_HLS_CACHE=0`` bypasses all three)
 SCHEDULE_CACHE = ScheduleCache()
 COMPILE_CACHE = CompileCache(capacity=64)
+FUNC_CODEGEN_CACHE = FuncCodegenCache(capacity=256)
 
 
 def apply_cached_schedule(module: Module, f: FuncOp, entry: CacheEntry) -> None:
-    """Replace ``f`` with the cached scheduled function (print/parse round
-    trip — the printer is the IR's canonical serialization)."""
-    splice_func_text(module, f.name, entry.text)
+    """Replace ``f`` with the cached scheduled function: a clone of the
+    stored FuncOp when the entry carries one (lossless, keeps source
+    locations), else a print/parse round trip of the stored text."""
+    if entry.func is not None:
+        from ..ir import clone_func
+
+        module.funcs[f.name] = clone_func(entry.func)
+    else:
+        splice_func_text(module, f.name, entry.text)
 
 
 def splice_func_text(module: Module, fname: str, text: str) -> None:
@@ -224,13 +282,8 @@ def schedule_funcs_parallel(module: Module, fnames: list[str],
     byte-identical result."""
     text = print_module(module)
     payloads = [(text, fn, opts) for fn in fnames]
-    try:
-        from concurrent.futures import ProcessPoolExecutor
-
-        with ProcessPoolExecutor(max_workers=max_workers) as ex:
-            return list(ex.map(_schedule_one_func, payloads))
-    except Exception:
-        return None
+    return pool_map(_schedule_one_func, payloads, max_workers,
+                    label="per-function scheduling")
 
 
 # ---------------------------------------------------------------------------
@@ -240,13 +293,22 @@ def schedule_funcs_parallel(module: Module, fnames: list[str],
 
 @dataclass(frozen=True)
 class DSEConfig:
-    """One autotuner candidate: scheduler knobs + structural knobs."""
+    """One autotuner candidate: scheduler knobs + structural knobs.
+
+    ``tile`` (innermost-loop tiling factor, 0/1 = off), ``interchange``
+    (perfect-nest loop swap) and ``partition`` (minimum local-RAM bank
+    count, 0/1 = off) are *pre-schedule structural* knobs applied by
+    :func:`apply_structural_knobs`; interchange is speculative and relies on
+    the sweep's sim-verification to score out illegal swaps."""
 
     pipeline: bool = True
     min_ii: int = 1
     clock_ns: float = CLOCK_NS
     unroll_parallel: bool = True
     merge_banks: bool = False
+    tile: int = 0
+    interchange: bool = False
+    partition: int = 0
 
     def scheduler_options(self) -> SchedulerOptions:
         return SchedulerOptions(pipeline_loops=self.pipeline,
@@ -257,16 +319,23 @@ class DSEConfig:
         return {"pipeline": self.pipeline, "min_ii": self.min_ii,
                 "clock_ns": self.clock_ns,
                 "unroll_parallel": self.unroll_parallel,
-                "merge_banks": self.merge_banks}
+                "merge_banks": self.merge_banks, "tile": self.tile,
+                "interchange": self.interchange,
+                "partition": self.partition}
 
 
 def design_space(pipeline: Sequence[bool] = (True, False),
                  min_ii: Sequence[int] = (1,),
                  clock_ns: Sequence[float] = (CLOCK_NS,),
                  unroll_parallel: Sequence[bool] = (True,),
-                 merge_banks: Sequence[bool] = (False,)) -> list[DSEConfig]:
+                 merge_banks: Sequence[bool] = (False,),
+                 tile: Sequence[int] = (0,),
+                 interchange: Sequence[bool] = (False,),
+                 partition: Sequence[int] = (0,)) -> list[DSEConfig]:
     """Cartesian product of the knob axes, with redundant points removed
-    (``min_ii`` only matters when pipelining), in deterministic order."""
+    (``min_ii`` only matters when pipelining; ``partition`` fights
+    ``merge_banks``, so the merged+partitioned combination is dropped), in
+    deterministic order."""
     out: list[DSEConfig] = []
     seen = set()
     for p in pipeline:
@@ -274,10 +343,13 @@ def design_space(pipeline: Sequence[bool] = (True, False),
             for ck in clock_ns:
                 for up in unroll_parallel:
                     for mb in merge_banks:
-                        c = DSEConfig(p, mi, ck, up, mb)
-                        if c not in seen:
-                            seen.add(c)
-                            out.append(c)
+                        for t in tile:
+                            for ic in interchange:
+                                for pt in (partition if not mb else (0,)):
+                                    c = DSEConfig(p, mi, ck, up, mb, t, ic, pt)
+                                    if c not in seen:
+                                        seen.add(c)
+                                        out.append(c)
     return out
 
 
@@ -304,6 +376,57 @@ def merge_local_banks(module: Module) -> int:
                                            kind=mt.kind)
                     n += 1
     return n
+
+
+def partition_local_banks(module: Module, factor: int) -> int:
+    """Array-partitioning knob (the dual of :func:`merge_local_banks`):
+    *distribute* leading packed dims of every local LUTRAM/BRAM alloc until
+    the memref has at least ``factor`` banks — more physical RAMs, more
+    parallel ports, so unrolled access patterns stop serializing on a shared
+    bank.  Allocs already banked at ``factor`` or finer are untouched.
+    Returns the number of ports retyped."""
+    if factor < 2:
+        return 0
+    n = 0
+    for f in module.funcs.values():
+        if f.attrs.get("external"):
+            continue
+        for op in f.body.walk():
+            if op.opname != "alloc":
+                continue
+            for r in op.results:
+                mt = r.type
+                if not (isinstance(mt, ir.MemrefType)
+                        and mt.kind in (ir.KIND_LUTRAM, ir.KIND_BRAM)):
+                    continue
+                packed = list(mt.packed)
+                if mt.num_banks >= factor or not packed:
+                    continue
+                nt = mt
+                while packed and nt.num_banks < factor:
+                    packed.pop(0)
+                    nt = ir.MemrefType(mt.shape, mt.elem, mt.port,
+                                       packed=packed, kind=mt.kind)
+                r.type = nt
+                n += 1
+    return n
+
+
+def apply_structural_knobs(module: Module, config: DSEConfig) -> None:
+    """Apply the candidate's pre-schedule structural transforms, in a fixed
+    order (tiling, then interchange, then banking) on erased HIR.  Transforms
+    that raise (e.g. a banking the scheduler later rejects) propagate to the
+    caller, which scores the candidate out."""
+    from ..passes.loop_transforms import interchange_loops, tile_innermost
+
+    if config.tile > 1:
+        tile_innermost(module, config.tile)
+    if config.interchange:
+        interchange_loops(module)
+    if config.merge_banks:
+        merge_local_banks(module)
+    if config.partition > 1:
+        partition_local_banks(module, config.partition)
 
 
 def has_mergeable_banks(module: Module) -> bool:
@@ -336,6 +459,11 @@ class DSEPoint:
     #: None = not swept, otherwise every lane matched the oracle or not.
     batch_verified: Optional[bool] = None
     batch_vectors: int = 0
+    #: successive halving: True when the candidate was eliminated at the
+    #: cheap-scoring rung and never fully compiled; ``est`` then holds the
+    #: schedule-only estimates it was ranked by.
+    pruned: bool = False
+    est: Optional[dict] = None
 
     def objectives(self) -> Optional[tuple]:
         if self.latency_ns is None or self.error is not None:
@@ -350,7 +478,8 @@ class DSEPoint:
                 "bram": self.bram, "iis": self.iis,
                 "verified": self.verified, "error": self.error,
                 "batch_verified": self.batch_verified,
-                "batch_vectors": self.batch_vectors}
+                "batch_vectors": self.batch_vectors,
+                "pruned": self.pruned, "est": self.est}
 
 
 def dominates(a: tuple, b: tuple) -> bool:
@@ -392,8 +521,7 @@ def _evaluate_candidate(payload) -> dict:
 
     try:
         m = parse(module_text)
-        if config.merge_banks:
-            merge_local_banks(m)
+        apply_structural_knobs(m, config)
         res = hls_schedule(m, options=config.scheduler_options())
         spec = DEFAULT_PIPELINE_SPEC if pipeline_spec is None else pipeline_spec
         if spec:
@@ -419,32 +547,144 @@ def _evaluate_candidate(payload) -> dict:
                 "bram": 0, "latency_cycles": None, "latency_ns": None}
 
 
-def _map_candidates(payloads: list, max_workers: int) -> list[dict]:
-    if max_workers > 1 and len(payloads) > 1:
-        try:
-            from concurrent.futures import ProcessPoolExecutor
+def _map_candidates(payloads: list, max_workers: int,
+                    fn=_evaluate_candidate) -> list[dict]:
+    out = pool_map(fn, payloads, max_workers, label="DSE candidate sweep")
+    if out is None:  # no pool (or pointless): serial sweep, identical output
+        out = [fn(p) for p in payloads]
+    return out
 
-            with ProcessPoolExecutor(max_workers=max_workers) as ex:
-                return list(ex.map(_evaluate_candidate, payloads))
-        except Exception:
-            pass  # no pool available: fall through to the serial sweep
-    return [_evaluate_candidate(p) for p in payloads]
+
+# -- successive halving: cheap schedule-only scoring --------------------------
+
+
+def estimate_resources(module: Module) -> dict:
+    """Pre-unroll LUT/FF/DSP estimate from a walk of the scheduled HIR: each
+    op's cost is replicated by the product of enclosing ``unroll_for`` trip
+    counts (spatial copies after unrolling), allocs are costed by their
+    banking.  Deliberately crude — the halving rung only needs a *ranking*
+    consistent with ``report_design``, not its absolute numbers."""
+
+    def width(t) -> int:
+        w = getattr(t, "width", None)
+        return int(w) if w else 32
+
+    lut = ff = dsp = 0
+
+    def walk(region, repl: int):
+        nonlocal lut, ff, dsp
+        for op in region.ops:
+            if op.opname in ("for", "unroll_for"):
+                inner = repl
+                if op.opname == "unroll_for":
+                    inner *= op.trip_count() or 1
+                walk(op.region(0), inner)
+            elif op.opname == "mult":
+                w = width(op.results[0].type)
+                if w > 10:
+                    dsp += repl
+                else:
+                    lut += repl * w
+            elif op.opname in ("add", "sub", "cmp", "shl", "shr", "and",
+                               "or", "xor", "select", "div"):
+                lut += repl * width(op.results[0].type)
+            elif op.opname == "delay":
+                by = int(op.attrs.get("by", 1) or 1)
+                ff += repl * width(op.results[0].type) * by
+            elif op.opname == "alloc":
+                mt = op.results[0].type
+                if isinstance(mt, ir.MemrefType):
+                    bits = width(mt.elem)
+                    for d in mt.shape:
+                        bits *= d
+                    if mt.kind == ir.KIND_REG:
+                        ff += bits
+                    elif mt.kind == ir.KIND_LUTRAM:
+                        lut += bits // 2
+                    # BRAM is a separate objective; banks add LUT mux glue
+                    lut += 4 * mt.num_banks
+
+    for f in module.funcs.values():
+        if not f.attrs.get("external"):
+            walk(f.body, 1)
+    return {"lut": lut, "ff": ff, "dsp": dsp}
+
+
+def _cheap_score_candidate(payload) -> dict:
+    """Pool worker for the halving rung: structural knobs + schedule search
+    only — no pass pipeline, no unrolling, no RTL, no simulation.  The
+    scheduler's entry-function span *is* the design latency in cycles, so
+    the latency estimate is near-exact; area comes from
+    :func:`estimate_resources`."""
+    module_text, entry, config = payload
+    from ..parser import parse
+    from .scheduler import hls_schedule
+
+    try:
+        m = parse(module_text)
+        apply_structural_knobs(m, config)
+        res = hls_schedule(m, options=config.scheduler_options())
+        span = res.func_spans.get(entry, 0)
+        if not span and res.func_spans:
+            span = max(res.func_spans.values())
+        est = estimate_resources(m)
+        return {"config": config, "error": None,
+                "est_latency_ns": float(span) * config.clock_ns,
+                "est_lut": est["lut"], "est_ff": est["ff"],
+                "est_dsp": est["dsp"]}
+    except Exception as e:
+        return {"config": config, "error": f"{type(e).__name__}: {e}"}
+
+
+def _rank_candidates(rows: list[dict]) -> list[float]:
+    """Non-dominated-sorting rank of cheap-score rows over
+    (est_latency_ns, est_lut, est_ff): rank 0 = estimated Pareto front,
+    rank 1 = front after removing rank 0, ...; errored rows rank last."""
+    objs = {i: (r["est_latency_ns"], r["est_lut"], r["est_ff"])
+            for i, r in enumerate(rows) if r.get("error") is None}
+    rank = [math.inf] * len(rows)
+    remaining = set(objs)
+    level = 0
+    while remaining:
+        front = [i for i in remaining
+                 if not any(dominates(objs[j], objs[i])
+                            for j in remaining if j != i)]
+        if not front:  # unreachable (dominance is a strict partial order)
+            front = sorted(remaining)
+        for i in front:
+            rank[i] = level
+        remaining -= set(front)
+        level += 1
+    return rank
 
 
 @dataclass
 class DSEResult:
     points: list[DSEPoint]
     front: list[DSEPoint]
+    #: sweep accounting: strategy, candidate counts, evaluations saved by
+    #: successive halving (empty dict for pre-PR-8 callers).
+    stats: dict = field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return {"points": [p.as_dict() for p in self.points],
-                "pareto_front": [p.as_dict() for p in self.front]}
+                "pareto_front": [p.as_dict() for p in self.front],
+                "stats": self.stats}
+
+
+def _row_to_point(r: dict) -> DSEPoint:
+    return DSEPoint(config=r["config"], latency_cycles=r["latency_cycles"],
+                    latency_ns=r["latency_ns"], lut=r["lut"], ff=r["ff"],
+                    dsp=r["dsp"], bram=r["bram"], iis=r["iis"],
+                    verified=r["verified"], error=r["error"])
 
 
 def explore_design(module: Module, space: Sequence[DSEConfig],
                    entry: Optional[str] = None, inputs=None, expected=None,
                    max_workers: int = 1,
-                   pipeline_spec: Optional[str] = None) -> DSEResult:
+                   pipeline_spec: Optional[str] = None,
+                   strategy: str = "exhaustive",
+                   keep_frac: float = 0.5) -> DSEResult:
     """Sweep ``space`` over (an erased copy of) ``module``: each candidate is
     scheduled under its knobs, optimized, emitted, resource-scored
     (``report_design``) and — when ``inputs`` are given — simulated for its
@@ -454,22 +694,52 @@ def explore_design(module: Module, space: Sequence[DSEConfig],
     (:func:`oracle_expected`) — structurally identical source modules never
     re-trace.  Candidates run on a process pool when ``max_workers > 1``
     (serial fallback is byte-identical).  Returns every scored point plus
-    the Pareto frontier over (latency_ns, LUT, FF)."""
+    the Pareto frontier over (latency_ns, LUT, FF).
+
+    ``strategy="halving"`` enables successive halving: every candidate gets
+    a cheap schedule-only score (:func:`_cheap_score_candidate` — the
+    scheduler span is the exact latency, area is estimated), then only the
+    best ``keep_frac`` fraction by non-dominated rank is fully compiled and
+    sim-verified.  Eliminated candidates appear in ``points`` with
+    ``pruned=True`` and their estimates in ``est``; ``result.stats`` records
+    the evaluations saved."""
     from .eraser import erase_schedule
 
     base = erase_schedule(module.clone())
     if inputs is not None and expected is None:
         expected = oracle_expected(base, entry, inputs)
     text = print_module(base)
-    payloads = [(text, entry, cfg, inputs, expected, pipeline_spec)
-                for cfg in space]
-    rows = _map_candidates(payloads, max_workers)
-    points = [DSEPoint(config=r["config"], latency_cycles=r["latency_cycles"],
-                       latency_ns=r["latency_ns"], lut=r["lut"], ff=r["ff"],
-                       dsp=r["dsp"], bram=r["bram"], iis=r["iis"],
-                       verified=r["verified"], error=r["error"])
-              for r in rows]
-    return DSEResult(points, pareto_front(points))
+    stats = {"strategy": strategy, "n_candidates": len(space),
+             "n_cheap": 0, "n_full": len(space), "evaluations_saved": 0}
+
+    survivors = list(range(len(space)))
+    est_rows: list[dict] = []
+    if strategy == "halving" and len(space) > 2:
+        ename = _entry_name(base, entry)
+        est_rows = _map_candidates([(text, ename, cfg) for cfg in space],
+                                   max_workers, fn=_cheap_score_candidate)
+        ranks = _rank_candidates(est_rows)
+        keep = max(1, math.ceil(len(space) * keep_frac))
+        order = sorted(range(len(space)), key=lambda i: (ranks[i], i))
+        survivors = sorted(order[:keep])
+        stats.update(n_cheap=len(space), n_full=len(survivors),
+                     evaluations_saved=len(space) - len(survivors))
+
+    payloads = [(text, entry, space[i], inputs, expected, pipeline_spec)
+                for i in survivors]
+    rows = dict(zip(survivors, _map_candidates(payloads, max_workers)))
+    points = []
+    for i, cfg in enumerate(space):
+        if i in rows:
+            points.append(_row_to_point(rows[i]))
+        else:
+            e = est_rows[i]
+            points.append(DSEPoint(
+                config=cfg, pruned=True, error=e.get("error"),
+                est=None if e.get("error") is not None else {
+                    "latency_ns": e["est_latency_ns"], "lut": e["est_lut"],
+                    "ff": e["est_ff"], "dsp": e["est_dsp"]}))
+    return DSEResult(points, pareto_front(points), stats)
 
 
 # ---------------------------------------------------------------------------
@@ -650,8 +920,7 @@ def sim_verify_front(module: Module, result: DSEResult,
     ridx = nargs - 1
     for point in result.front:
         m = parse(text)
-        if point.config.merge_banks:
-            merge_local_banks(m)
+        apply_structural_knobs(m, point.config)
         hls_schedule(m, options=point.config.scheduler_options())
         if spec:
             PassManager.from_spec(spec).run(m)
@@ -735,21 +1004,45 @@ class DiskCompileCache:
             return
         self._evict()
 
+    #: tmp files older than this are considered abandoned by a crashed
+    #: writer and swept during eviction.
+    STALE_TMP_S = 300.0
+
     def _evict(self) -> None:
+        """Lock-free LRU eviction tolerant of racing processes: writers from
+        an emission/DSE pool may evict, replace or refresh entries while this
+        runs, so every ``stat``/``unlink`` tolerates the file vanishing
+        underneath us (a racer unlinking first still frees the bytes, so the
+        running total is decremented either way).  Abandoned ``.tmp<pid>``
+        spill files from crashed writers are swept once they go stale."""
         try:
-            files = [(f.stat().st_mtime, f.stat().st_size, f)
-                     for f in self.root.glob("*.pkl")]
+            listing = list(self.root.glob("*.pkl"))
+            tmps = [t for t in self.root.glob("*.tmp*") if t.is_file()]
         except OSError:
             return
+        now = time.time()
+        for t in tmps:
+            try:
+                if now - t.stat().st_mtime > self.STALE_TMP_S:
+                    t.unlink()
+            except OSError:
+                pass  # racing writer finished (renamed) or swept it first
+        files = []
+        for f in listing:
+            try:
+                st = f.stat()
+            except OSError:
+                continue  # raced: a concurrent evictor got there first
+            files.append((st.st_mtime, st.st_size, str(f)))
         total = sum(sz for _, sz, _ in files)
         for _, sz, f in sorted(files):
             if total <= self.max_bytes:
                 break
             try:
-                f.unlink()
-                total -= sz
+                os.unlink(f)
             except OSError:
-                pass
+                pass  # already evicted by a racer — bytes freed regardless
+            total -= sz
 
     def __len__(self) -> int:
         return sum(1 for _ in self.root.glob("*.pkl"))

@@ -108,6 +108,9 @@ class HLSResult:
     # MII lower bound and the actual II probe sequence per pipelined loop IV
     miis: dict[str, int] = field(default_factory=dict)
     ii_probes: dict[str, list[int]] = field(default_factory=dict)
+    # body span (end cycle) per scheduled function — the entry's span is the
+    # design latency in cycles, which the DSE halving rung scores against
+    func_spans: dict[str, int] = field(default_factory=dict)
     # search-cache statistics (AnalysisManager-style): functions whose
     # schedule came from the fingerprint cache vs freshly searched
     search_cache_hits: int = 0
@@ -150,7 +153,8 @@ class HLSScheduler:
     def schedule_func(self, f: FuncOp) -> HLSResult:
         """Schedule one function in place (search + pipeline balancing +
         result-delay reconciliation)."""
-        self._schedule_region(f, f.body, f.time_var, None)
+        span, _ = self._schedule_region(f, f.body, f.time_var, None)
+        self.result.func_spans[f.name] = span
         self.result.delays_inserted += balance_delays(f)
         self.result.delays_inserted += reconcile_result_delays(self.module, f)
         return self.result
@@ -515,7 +519,7 @@ def hls_schedule(module: Module, pipeline_loops: bool = True,
         _merge_func_meta(result, meta)
         if cache_obj is not None and key is not None:
             from ..printer import print_func
-            cache_obj.put(key, print_func(f), meta)
+            cache_obj.put(key, print_func(f), meta, f)
     return result
 
 
@@ -523,7 +527,8 @@ def _func_meta(r: HLSResult) -> dict:
     return {"iis": dict(r.iis), "miis": dict(r.miis),
             "ii_probes": {k: list(v) for k, v in r.ii_probes.items()},
             "search_iters": r.search_iters, "sched_ops": r.sched_ops,
-            "delays_inserted": r.delays_inserted}
+            "delays_inserted": r.delays_inserted,
+            "func_spans": dict(r.func_spans)}
 
 
 def _merge_func_meta(result: HLSResult, meta: dict) -> None:
@@ -533,13 +538,16 @@ def _merge_func_meta(result: HLSResult, meta: dict) -> None:
     result.search_iters += meta["search_iters"]
     result.sched_ops += meta["sched_ops"]
     result.delays_inserted += meta["delays_inserted"]
+    # .get: disk-cache entries written by older builds lack func_spans
+    result.func_spans.update(meta.get("func_spans", {}))
 
 
 def hls_compile(module: Module, entry: Optional[str] = None,
                 pipeline: Optional[str] = None, backend: str = "verilog",
                 pipeline_loops: bool = True,
                 options: Optional[SchedulerOptions] = None,
-                cache: bool = True, max_workers: int = 1):
+                cache: bool = True, max_workers: int = 1,
+                hierarchy: str = "inline"):
     """Full HLS pipeline: schedule + verify + optimize + netlist codegen.
     Returns (HLSResult, {name: VerilogModule}).
 
@@ -559,8 +567,14 @@ def hls_compile(module: Module, entry: Optional[str] = None,
     fingerprint, ``result.from_cache``); when ``REPRO_HLS_CACHE_DIR`` is
     set, misses also consult a persistent on-disk cache so warm compiles
     survive process restarts (size-capped, see ``dse.DiskCompileCache``).
-    Set ``cache=False`` or ``REPRO_HLS_CACHE=0`` to disable every cache
-    layer."""
+    Below the whole-module layer, codegen is *per-function incremental*:
+    whole-module misses still reuse every untouched function's lowered RTL
+    and printed text from ``dse.FUNC_CODEGEN_CACHE``, so editing one
+    ``hir.func`` recompiles only that function (PR 8).  Set ``cache=False``
+    or ``REPRO_HLS_CACHE=0`` to disable every cache layer.
+
+    ``hierarchy`` selects flattened (``"inline"``) or modular
+    (``"modules"``) emission, forwarded to ``generate_verilog``."""
     from ..codegen import generate_verilog
     from ..passmgr import DEFAULT_PIPELINE_SPEC, AnalysisManager, PassManager
     from ..verifier import verify
@@ -573,7 +587,7 @@ def hls_compile(module: Module, entry: Optional[str] = None,
     ckey = None
     if use_cache:
         ckey = dse.fingerprint_module(
-            module, extra=(entry, spec, backend, opts.key()))
+            module, extra=(entry, spec, backend, opts.key(), hierarchy))
         hit = dse.COMPILE_CACHE.get(ckey)
         if hit is not None:
             dse.replace_module_contents(module, hit.module)
@@ -607,7 +621,12 @@ def hls_compile(module: Module, entry: Optional[str] = None,
         pm = PassManager.from_spec(spec, analysis_manager=am)
         pm.run(module)
         res.pass_manager = pm
-    vs = generate_verilog(module, entry=entry, am=am, backend=backend)
+    vs = generate_verilog(module, entry=entry, am=am, backend=backend,
+                          hierarchy=hierarchy,
+                          func_cache=(dse.FUNC_CODEGEN_CACHE if use_cache
+                                      else None),
+                          cache_key_extra=(spec, opts.key()),
+                          max_workers=max_workers)
     if use_cache and ckey is not None:
         meta = {"funcs": [_func_meta(res)]}
         dse.COMPILE_CACHE.put(ckey, module, vs, meta)

@@ -26,6 +26,10 @@ Registered passes (spec names in parentheses — use them in
                      (pre-codegen)
   * pipeline_loops  (``pipeline-loop``)   — minimum-II modulo pipelining of
                      sequential innermost loops (schedule transform)
+  * tile_innermost  (``tile``)            — innermost-loop tiling on erased
+                     HIR (DSE structural knob)
+  * interchange_loops (``interchange``)   — perfect-nest loop interchange on
+                     erased HIR (speculative; DSE sim-verified)
   * retime          (``retime``)          — delay hoisting across
                      combinational ops (shift-register sharing)
 
@@ -57,6 +61,8 @@ from .strength_reduce import StrengthReduce, strength_reduce
 from .inline import Inline, inline_calls
 from .unroll import Unroll, unroll_loops
 from .schedule_transforms import PipelineLoop, Retime, pipeline_loops, retime
+from .loop_transforms import (Interchange, Tile, interchange_loops,
+                              tile_innermost)
 # RTL-level passes (they run on an RTLDesign, not an HIR Module, but share
 # the registry/PassManager infrastructure and spec naming)
 from ..codegen.rtl import (RTL_PIPELINE_SPEC, CombShare, ControllerMerge,
@@ -115,6 +121,10 @@ __all__ = [
     "inline_calls",
     "pipeline_loops",
     "retime",
+    "tile_innermost",
+    "interchange_loops",
+    "Tile",
+    "Interchange",
     "Canonicalize",
     "ConstProp",
     "CSE",

@@ -1,6 +1,8 @@
 """Tests of the design-space explorer (``core.hls.dse``): structural
-fingerprints, Pareto-front computation, the bank-merging knob, and the
-``explore_design`` sweep (serial and pooled)."""
+fingerprints, Pareto-front computation, the bank-merging knob, the
+``explore_design`` sweep (serial and pooled, with serial fallback when no
+process pool is available), and adversarial per-function codegen cache-key
+collision checks."""
 
 import numpy as np
 import pytest
@@ -169,3 +171,86 @@ def test_explore_design_scores_out_bad_candidate():
     bad = [p for p in res.points if p.error is not None]
     assert len(good) >= 1 and len(bad) >= 1
     assert all(p.config.clock_ns > 0 for p in res.front)
+
+
+# ---------------------------------------------------------------------------
+# Pool fallback: a broken process pool degrades to serial, never crashes
+# ---------------------------------------------------------------------------
+
+
+def test_pool_map_warns_and_returns_none_when_pool_broken(monkeypatch):
+    from repro.core import pool
+
+    def boom(*a, **kw):
+        raise OSError("no semaphores here")
+
+    monkeypatch.setattr(pool, "ProcessPoolExecutor", boom)
+    with pytest.warns(RuntimeWarning, match="falling back to serial"):
+        assert pool.pool_map(len, ["ab", "cde"], max_workers=4) is None
+
+
+def test_explore_design_pooled_falls_back_serially(monkeypatch):
+    m, entry, ins, exp = _gemm_setup()
+    space = design_space(clock_ns=(10.0, 5.0))
+    r1 = explore_design(m, space, entry=entry, inputs=ins, expected=exp)
+
+    from repro.core import pool
+
+    def boom(*a, **kw):
+        raise OSError("no semaphores here")
+
+    monkeypatch.setattr(pool, "ProcessPoolExecutor", boom)
+    with pytest.warns(RuntimeWarning, match="falling back to serial"):
+        r2 = explore_design(m, space, entry=entry, inputs=ins, expected=exp,
+                            max_workers=4)
+    assert [p.as_dict() for p in r1.points] == [p.as_dict() for p in r2.points]
+
+
+# ---------------------------------------------------------------------------
+# Adversarial cache-key collisions: modules sharing a function fingerprint
+# but differing in pipeline spec, scheduler options, clock, backend or
+# hierarchy must never share a per-function codegen cache entry
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def _fresh_func_cache():
+    from repro.core.hls.dse import (COMPILE_CACHE, FUNC_CODEGEN_CACHE,
+                                    SCHEDULE_CACHE)
+
+    for c in (SCHEDULE_CACHE, COMPILE_CACHE, FUNC_CODEGEN_CACHE):
+        c.clear()
+    yield FUNC_CODEGEN_CACHE
+    for c in (SCHEDULE_CACHE, COMPILE_CACHE, FUNC_CODEGEN_CACHE):
+        c.clear()
+
+
+def _compile_ctx(**kw):
+    from repro.core.hls.scheduler import hls_compile
+
+    m, entry = GALLERY["gemm"].build(4)
+    return hls_compile(m, entry=entry, **kw)
+
+
+@pytest.mark.parametrize("first,second", [
+    (dict(hierarchy="modules"), dict(hierarchy="modules", backend="vhdl")),
+    (dict(hierarchy="modules"), dict(hierarchy="inline")),
+    (dict(hierarchy="modules"), dict(hierarchy="modules", pipeline="")),
+    (dict(hierarchy="modules"),
+     dict(hierarchy="modules", pipeline_loops=False)),
+], ids=["backend", "hierarchy", "pipeline-spec", "sched-opts"])
+def test_func_cache_keys_never_collide_across_context(
+        first, second, _fresh_func_cache):
+    _compile_ctx(**first)
+    h0 = _fresh_func_cache.hits
+    _compile_ctx(**second)
+    assert _fresh_func_cache.hits == h0, (first, second)
+
+
+def test_func_cache_keys_never_collide_across_clock(_fresh_func_cache):
+    from repro.core.hls.scheduler import SchedulerOptions
+
+    _compile_ctx(hierarchy="modules", options=SchedulerOptions(clock_ns=4.0))
+    h0 = _fresh_func_cache.hits
+    _compile_ctx(hierarchy="modules", options=SchedulerOptions(clock_ns=2.0))
+    assert _fresh_func_cache.hits == h0

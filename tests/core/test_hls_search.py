@@ -230,6 +230,7 @@ def test_compile_cache_warm_repeat_identical():
     erased = erase_schedule(m)
     dse.COMPILE_CACHE.clear()
     dse.SCHEDULE_CACHE.clear()
+    dse.FUNC_CODEGEN_CACHE.clear()
     m1, m2 = erased.clone(), erased.clone()
     r1, v1 = hls_compile(m1, entry=entry)
     r2, v2 = hls_compile(m2, entry=entry)
@@ -251,6 +252,7 @@ def test_compile_cache_warm_repeat_is_10x_faster():
     erased = erase_schedule(m)
     dse.COMPILE_CACHE.clear()
     dse.SCHEDULE_CACHE.clear()
+    dse.FUNC_CODEGEN_CACHE.clear()
     t0 = time.perf_counter()
     hls_compile(erased.clone(), entry=entry)
     cold = time.perf_counter() - t0

@@ -1,0 +1,191 @@
+"""Tests for PR 8's compile-throughput work: per-function incremental
+recompilation (``dse.FUNC_CODEGEN_CACHE`` threaded through ``hls_compile``
+-> ``generate_verilog``), pooled per-module backend emission, and the
+successive-halving DSE strategy.
+
+The load-bearing property throughout is *byte-identity*: every warm or
+parallel path must emit exactly the text the cold serial path emits,
+loc comments and signal names included."""
+
+import os
+import time
+
+import pytest
+
+from repro.core.gallery import gemm
+from repro.core.hls import dse
+from repro.core.hls.scheduler import hls_compile
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    for c in (dse.SCHEDULE_CACHE, dse.COMPILE_CACHE, dse.FUNC_CODEGEN_CACHE):
+        c.clear()
+    yield
+    for c in (dse.SCHEDULE_CACHE, dse.COMPILE_CACHE, dse.FUNC_CODEGEN_CACHE):
+        c.clear()
+
+
+def _edit_mac(m):
+    """Structurally edit gemm's `mac` callee (add -> sub) without touching
+    its interface — the single-function re-edit the incremental path is
+    built for."""
+    for op in m.funcs["mac"].body.ops:
+        if op.opname == "add":
+            op.opname = "sub"
+            return m
+    raise AssertionError("no add op in mac")
+
+
+def _cold_compile(monkeypatch, m, entry, **kw):
+    """Compile with every cache layer disabled (reference output)."""
+    monkeypatch.setenv("REPRO_HLS_CACHE", "0")
+    try:
+        return hls_compile(m, entry=entry, **kw)
+    finally:
+        monkeypatch.delenv("REPRO_HLS_CACHE")
+
+
+def _assert_same_netlists(got, want):
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k].text == want[k].text, k
+        assert got[k].netlist == want[k].netlist, k
+
+
+# ---------------------------------------------------------------------------
+# Per-function incremental recompilation
+# ---------------------------------------------------------------------------
+
+
+def test_warm_reedit_hits_func_cache_modules(monkeypatch):
+    n = 8
+    m1, entry = gemm.build(n)
+    hls_compile(m1, entry=entry, hierarchy="modules")
+    assert len(dse.FUNC_CODEGEN_CACHE) == 2  # gemm + mac
+
+    m2 = _edit_mac(gemm.build(n)[0])
+    h0 = dse.FUNC_CODEGEN_CACHE.hits
+    r2, v2 = hls_compile(m2, entry=entry, hierarchy="modules")
+    assert not r2.from_cache            # whole-module layer missed...
+    assert dse.FUNC_CODEGEN_CACHE.hits == h0 + 1  # ...but gemm was reused
+
+    # byte-identical to a fully-cold compile of the same edited module
+    m3 = _edit_mac(gemm.build(n)[0])
+    _, v3 = _cold_compile(monkeypatch, m3, entry, hierarchy="modules")
+    _assert_same_netlists(v2, v3)
+
+
+def test_warm_reedit_speedup(monkeypatch):
+    """Acceptance: warm single-function re-edit of gemm (one callee changed)
+    at least 10x faster than a cold compile."""
+    n = 8
+    m1, entry = gemm.build(n)
+    t0 = time.perf_counter()
+    hls_compile(m1, entry=entry, hierarchy="modules")
+    cold_s = time.perf_counter() - t0
+
+    m2 = _edit_mac(gemm.build(n)[0])
+    t0 = time.perf_counter()
+    hls_compile(m2, entry=entry, hierarchy="modules")
+    warm_s = time.perf_counter() - t0
+    assert warm_s * 10 <= cold_s, (cold_s, warm_s)
+
+
+def test_warm_reedit_byte_identity_inline(monkeypatch):
+    """Inline mode: the edited callee invalidates the flattened entry (its
+    body is part of the key closure), but the re-emitted text must still be
+    byte-identical to cold — exercising the schedule-cache FuncOp splice
+    (print/parse round trips would drop source locations)."""
+    n = 4
+    m1, entry = gemm.build(n)
+    hls_compile(m1, entry=entry)
+    m2 = _edit_mac(gemm.build(n)[0])
+    _, v2 = hls_compile(m2, entry=entry)
+    m3 = _edit_mac(gemm.build(n)[0])
+    _, v3 = _cold_compile(monkeypatch, m3, entry)
+    _assert_same_netlists(v2, v3)
+
+
+def test_identical_recompile_still_hits_module_cache():
+    m1, entry = gemm.build(4)
+    hls_compile(m1, entry=entry, hierarchy="modules")
+    r2, _ = hls_compile(gemm.build(4)[0], entry=entry, hierarchy="modules")
+    assert r2.from_cache
+
+
+# ---------------------------------------------------------------------------
+# Parallel backend emission
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("hierarchy", ["inline", "modules"])
+@pytest.mark.parametrize("backend", ["verilog", "vhdl"])
+def test_parallel_emission_matches_serial(hierarchy, backend):
+    from repro.core.codegen.verilog import generate_verilog
+
+    vs_s = generate_verilog(gemm.build(4)[0], entry="gemm",
+                            hierarchy=hierarchy, backend=backend)
+    vs_p = generate_verilog(gemm.build(4)[0], entry="gemm",
+                            hierarchy=hierarchy, backend=backend,
+                            max_workers=4)
+    _assert_same_netlists(vs_p, vs_s)
+
+
+def test_parallel_emission_falls_back_serially(monkeypatch):
+    """With the process pool broken, max_workers>1 must warn and still
+    produce the serial result rather than crash."""
+    from repro.core import pool
+    from repro.core.codegen.verilog import generate_verilog
+
+    def boom(*a, **kw):
+        raise OSError("no pool for you")
+
+    monkeypatch.setattr(pool, "ProcessPoolExecutor", boom)
+    vs_s = generate_verilog(gemm.build(4)[0], entry="gemm",
+                            hierarchy="modules")
+    with pytest.warns(RuntimeWarning, match="falling back to serial"):
+        vs_p = generate_verilog(gemm.build(4)[0], entry="gemm",
+                                hierarchy="modules", max_workers=4)
+    _assert_same_netlists(vs_p, vs_s)
+
+
+# ---------------------------------------------------------------------------
+# Successive-halving DSE
+# ---------------------------------------------------------------------------
+
+
+def _halving_setup(n=4):
+    m, entry = gemm.build(n)
+    ins = gemm.make_inputs(n)
+    return m, entry, ins, gemm.oracle(*ins[:2])
+
+
+def test_halving_matches_exhaustive_front_with_half_the_compiles():
+    m, entry, ins, exp = _halving_setup()
+    space = dse.design_space(pipeline=(True, False), clock_ns=(2.0, 4.0),
+                             merge_banks=(False, True), tile=(0, 2))
+    r_ex = dse.explore_design(m, space, entry=entry,
+                              inputs=[a.copy() for a in ins], expected=exp)
+    r_h = dse.explore_design(m, space, entry=entry,
+                             inputs=[a.copy() for a in ins], expected=exp,
+                             strategy="halving", keep_frac=0.5)
+    front = lambda r: sorted(repr(p.config.as_dict()) for p in r.front)
+    assert front(r_h) == front(r_ex)
+    assert r_h.stats["n_full"] <= len(space) // 2
+    assert r_h.stats["evaluations_saved"] == \
+        len(space) - r_h.stats["n_full"]
+    # every candidate is accounted for: pruned ones carry their estimates
+    assert len(r_h.points) == len(space)
+    pruned = [p for p in r_h.points if p.pruned]
+    assert len(pruned) == r_h.stats["evaluations_saved"]
+    assert all(p.est is not None for p in pruned if p.error is None)
+
+
+def test_halving_keep_frac_one_degenerates_to_exhaustive():
+    m, entry, ins, exp = _halving_setup()
+    space = dse.design_space(clock_ns=(2.0, 4.0), merge_banks=(False, True))
+    r_h = dse.explore_design(m, space, entry=entry, inputs=ins, expected=exp,
+                             strategy="halving", keep_frac=1.0)
+    assert r_h.stats["n_full"] == len(space)
+    assert not any(p.pruned for p in r_h.points)

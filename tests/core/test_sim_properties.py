@@ -6,8 +6,13 @@ Three properties, all derandomized/seeded for CI reproducibility:
     every RTL pass in ``RTL_PIPELINE_SPEC`` (per-cycle output-port traces);
   * on the same random modules the numpy and jax backends produce identical
     traces (skipped when jax is absent);
-  * on gallery kernels with hypothesis-drawn stimulus, the vectorized
+  * on gallery kernels with hypothesis-drawn seeds, the vectorized
     simulator matches the event-driven ``lower.simulate`` oracle exactly.
+
+Per-lane stimulus comes from ``sim.fold_in_stimulus`` — jax-native
+``fold_in`` counter streams keyed by the hypothesis-drawn seed — rather
+than a shared sequential generator, so lane values are stable under suite
+growth while staying pinned by ``@seed``.
 """
 
 import numpy as np
@@ -40,9 +45,12 @@ def _wrap(m):
     return f, ins
 
 
-def _stimulus(ins, rng):
-    return [rng.integers(0, 1 << min(p.width, 16), size=LANES,
-                         dtype=np.int64) for p in ins]
+def _stimulus(ins, sd):
+    # jax-native fold_in streams (per-input, per-lane); numpy SeedSequence
+    # fallback keeps the suite runnable without jax.  Widths are capped at
+    # 16 bits so multi-op datapaths stay inside the simulators' i64 domain.
+    return rsim.fold_in_stimulus([min(p.width, 16) for p in ins], LANES,
+                                 seed=sd)
 
 
 def _signature(design, func, stim):
@@ -58,7 +66,7 @@ def test_rtl_passes_preserve_cycle_accuracy(m, sd):
     func, ins = _wrap(m)
     design = RTLDesign(entry="pm")
     design.add(m)
-    stim = _stimulus(ins, np.random.default_rng(sd))
+    stim = _stimulus(ins, sd)
     prev = _signature(design, func, stim)
     for name in [p.strip() for p in RTL_PIPELINE_SPEC.split(",") if p.strip()]:
         PassManager.from_spec(name).run(design)
@@ -77,7 +85,7 @@ def test_backends_agree_on_random_modules(m, sd):
     func, ins = _wrap(m)
     design = RTLDesign(entry="pm")
     design.add(m)
-    stim = _stimulus(ins, np.random.default_rng(sd))
+    stim = _stimulus(ins, sd)
     a = _signature(design, func, stim)
     s = rsim.RTLSimulator(design.copy(), func, "pm", backend="jax")
     b = s.run(stim, CYCLES, batched=True, check_conflicts=False, trace=True)

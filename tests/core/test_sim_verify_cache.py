@@ -3,6 +3,9 @@ cache: memoized jax-oracle reference outputs, ``explore_design``
 auto-expected, batched Pareto-front verification on the vectorized
 simulator, and the ``REPRO_HLS_CACHE_DIR`` on-disk compile cache."""
 
+import os
+from pathlib import Path
+
 import numpy as np
 import pytest
 
@@ -15,9 +18,13 @@ from repro.core.hls.scheduler import hls_compile
 def _fresh_caches():
     dse.clear_oracle_cache()
     dse.COMPILE_CACHE.clear()
+    dse.SCHEDULE_CACHE.clear()
+    dse.FUNC_CODEGEN_CACHE.clear()
     yield
     dse.clear_oracle_cache()
     dse.COMPILE_CACHE.clear()
+    dse.SCHEDULE_CACHE.clear()
+    dse.FUNC_CODEGEN_CACHE.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -155,3 +162,67 @@ def test_disk_cache_respects_global_kill_switch(tmp_path, monkeypatch):
     mod, entry = gemm.build(n=4)
     hls_compile(mod.clone(), entry=entry)
     assert len(list(tmp_path.glob("*.pkl"))) == 0
+
+
+_STRESS_WORKER = r"""
+import os, sys, random
+
+from repro.core.gallery import array_add
+from repro.core.hls import dse
+from repro.core.hls.scheduler import hls_compile
+
+wid = int(sys.argv[1])
+cache_dir = sys.argv[2]
+
+mod, entry = array_add.build(n=8)
+os.environ["REPRO_HLS_CACHE"] = "0"
+_, vs = hls_compile(mod.clone(), entry=entry)
+del os.environ["REPRO_HLS_CACHE"]
+
+dc = dse.DiskCompileCache(cache_dir)
+dc.put("probe", mod, vs, {"funcs": []})
+entry_bytes = max(f.stat().st_size for f in dc.root.glob("*.pkl"))
+dc.max_bytes = entry_bytes * 3  # keep eviction constantly racing
+
+rng = random.Random(wid)
+for i in range(30):
+    dc.put(f"w{wid}k{i}", mod, vs, {"funcs": []})
+    hit = dc.get(f"w{rng.randrange(4)}k{rng.randrange(30)}")
+    if hit is not None:
+        m, nets, meta = hit
+        assert nets, "hit with no netlists"
+print("OK", wid)
+"""
+
+
+def test_disk_cache_concurrent_writers_race_safely(tmp_path):
+    """Several processes hammer one size-capped cache directory: racing
+    puts, gets and evictions (files vanishing between listing, stat and
+    unlink) must never raise, and the cap must still be roughly enforced
+    once the dust settles."""
+    import subprocess
+    import sys
+
+    script = tmp_path / "worker.py"
+    script.write_text(_STRESS_WORKER)
+    cache_dir = tmp_path / "cache"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(Path(__file__).resolve().parents[2] / "src"),
+         env.get("PYTHONPATH", "")])
+    procs = [subprocess.Popen(
+        [sys.executable, str(script), str(w), str(cache_dir)],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE)
+        for w in range(4)]
+    for w, p in enumerate(procs):
+        out, err = p.communicate(timeout=180)
+        assert p.returncode == 0, (w, err.decode()[-2000:])
+        assert f"OK {w}" in out.decode()
+    # cap roughly holds: each worker ran with max_bytes = 3 entries, so the
+    # survivor set is a handful of entries, not 120
+    files = list(cache_dir.glob("*.pkl"))
+    assert 1 <= len(files) <= 8, [f.name for f in files]
+    # the directory is still a working cache for a fresh process
+    dc = dse.DiskCompileCache(str(cache_dir))
+    key = files[0].stem
+    assert dc.get(key) is not None

@@ -1,0 +1,115 @@
+"""CI perf-regression gate: compare a fresh benchmark artifact against its
+committed baseline with a generous tolerance.
+
+Usage::
+
+    python tools/perf_gate.py --fresh artifacts/bench/BENCH_codegen_scaling.json \
+        --baseline benchmarks/baselines/BENCH_codegen_scaling.json [--tolerance 8]
+
+The schema is detected from the payload:
+
+  * ``BENCH_codegen_scaling.json`` (``{"rows": [...]}``) — every
+    (kernel, size) row present in BOTH files must have
+    ``fresh total_s <= tolerance * baseline total_s``.
+  * ``BENCH_incremental.json`` (``{"reedit": [...]}``) — per matching gemm
+    size, ``warm_reedit_s`` within tolerance, plus the machine-independent
+    correctness flags: ``byte_identical`` and ``emit_equal`` must hold and
+    ``reedit_speedup`` must stay above ``--speedup-floor``.
+
+Only rows present in both files are gated (CI runs smaller sweeps than the
+committed full-run baselines), and the tolerance is deliberately loose —
+shared CI runners are noisy; the gate exists to catch order-of-magnitude
+regressions (a quadratic sneaking back in, a cache layer silently dead),
+not single-digit percent drift.  Exits nonzero with a per-row report on any
+violation."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _gate_scaling(fresh: dict, base: dict, tol: float) -> list[str]:
+    fr = {(r["kernel"], r["size"]): r for r in fresh["rows"]}
+    br = {(r["kernel"], r["size"]): r for r in base["rows"]}
+    bad, n = [], 0
+    for key in sorted(fr.keys() & br.keys()):
+        f_s, b_s = fr[key]["total_s"], br[key]["total_s"]
+        n += 1
+        verdict = "ok" if f_s <= tol * max(b_s, 1e-4) else "REGRESSION"
+        print(f"  {key[0]:10s} size={key[1]:<4d} total_s {f_s:.3f} "
+              f"(baseline {b_s:.3f}, x{tol:g} allowed): {verdict}")
+        if verdict != "ok":
+            bad.append(f"{key}: {f_s:.3f}s > {tol:g} * {b_s:.3f}s")
+    if n == 0:
+        bad.append("no (kernel, size) rows in common — gate checked nothing")
+    return bad
+
+
+def _gate_incremental(fresh: dict, base: dict, tol: float,
+                      speedup_floor: float) -> list[str]:
+    fr = {r["n"]: r for r in fresh["reedit"]}
+    br = {r["n"]: r for r in base["reedit"]}
+    bad, n = [], 0
+    for size in sorted(fr.keys() & br.keys()):
+        f, b = fr[size], br[size]
+        n += 1
+        ok_t = f["warm_reedit_s"] <= tol * max(b["warm_reedit_s"], 1e-4)
+        ok_s = f["reedit_speedup"] >= speedup_floor
+        ok_b = f["byte_identical"]
+        print(f"  gemm n={size}: warm_reedit {f['warm_reedit_s']:.4f}s "
+              f"(baseline {b['warm_reedit_s']:.4f}s), speedup "
+              f"{f['reedit_speedup']}x (floor {speedup_floor:g}), "
+              f"byte_identical={ok_b}: "
+              f"{'ok' if ok_t and ok_s and ok_b else 'REGRESSION'}")
+        if not ok_t:
+            bad.append(f"n={size}: warm_reedit_s {f['warm_reedit_s']:.4f} > "
+                       f"{tol:g} * {b['warm_reedit_s']:.4f}")
+        if not ok_s:
+            bad.append(f"n={size}: reedit_speedup {f['reedit_speedup']} < "
+                       f"{speedup_floor:g}")
+        if not ok_b:
+            bad.append(f"n={size}: warm output not byte-identical to cold")
+    for e in fresh.get("parallel_emit", []):
+        if not e["emit_equal"]:
+            bad.append(f"parallel emit n={e['n']}: output differs from serial")
+    if n == 0:
+        bad.append("no gemm sizes in common — gate checked nothing")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", required=True, help="freshly produced artifact")
+    ap.add_argument("--baseline", required=True, help="committed baseline")
+    ap.add_argument("--tolerance", type=float, default=5.0,
+                    help="allowed slowdown factor vs baseline (default 5)")
+    ap.add_argument("--speedup-floor", type=float, default=5.0,
+                    help="minimum warm-reedit speedup (incremental schema)")
+    args = ap.parse_args(argv)
+
+    fresh = json.loads(Path(args.fresh).read_text())
+    base = json.loads(Path(args.baseline).read_text())
+    print(f"perf gate: {args.fresh} vs {args.baseline} "
+          f"(tolerance x{args.tolerance:g})")
+    if "rows" in fresh and "rows" in base:
+        bad = _gate_scaling(fresh, base, args.tolerance)
+    elif "reedit" in fresh and "reedit" in base:
+        bad = _gate_incremental(fresh, base, args.tolerance,
+                                args.speedup_floor)
+    else:
+        print("unrecognized or mismatched artifact schemas")
+        return 2
+    if bad:
+        print("\nperf gate FAILED:")
+        for b in bad:
+            print(f"  - {b}")
+        return 1
+    print("perf gate ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
