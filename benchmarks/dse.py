@@ -46,6 +46,9 @@ ARTIFACT = (Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 KERNELS = {
     "gemm": ({"n": 8}, 2),
     "conv2d": ({"h": 8, "w": 8}, 1),
+    # traced through core/frontend: the autotuner sees the jnp.matmul
+    # program exactly like a hand-written kernel
+    "frontend_matmul": ({"m": 8, "k": 8, "n": 8}, 2),
 }
 
 #: Swept axes.  Three clock budgets trade cycle count against chaining

@@ -40,7 +40,7 @@ def _caller_loc(depth: int = 2) -> Loc:
     try:
         fr = inspect.stack()[depth]
         return Loc(fr.filename.split("/")[-1], fr.lineno, 0)
-    except Exception:  # pragma: no cover
+    except (IndexError, OSError):  # pragma: no cover - shallow/exotic stacks
         return ir.UNKNOWN_LOC
 
 

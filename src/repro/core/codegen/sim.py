@@ -54,7 +54,7 @@ try:  # pragma: no cover - absence exercised via the numpy backend
     from jax.experimental import enable_x64
 
     HAVE_JAX = True
-except Exception:  # pragma: no cover
+except ImportError:  # pragma: no cover
     jax = None
     jnp = None
     enable_x64 = None

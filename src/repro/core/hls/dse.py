@@ -34,6 +34,7 @@ import os
 import pickle
 import re
 import time
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from pathlib import Path
@@ -541,10 +542,31 @@ def _evaluate_candidate(payload) -> dict:
             if expected is not None:
                 point["verified"] = bool(np.array_equal(args[-1], expected))
         return point
-    except Exception as e:  # scored out, sweep continues
+    except MemoryError:
+        raise  # resource exhaustion must abort the sweep, not score a point
+    except _expected_sweep_errors() as e:  # scored out, sweep continues
         return {"config": config, "error": f"{type(e).__name__}: {e}",
                 "verified": False, "iis": {}, "lut": 0, "ff": 0, "dsp": 0,
                 "bram": 0, "latency_cycles": None, "latency_ns": None}
+    except Exception as e:  # unexpected: still score out, but loudly
+        warnings.warn(
+            f"DSE candidate raised unexpected {type(e).__name__}: {e}",
+            RuntimeWarning, stacklevel=2)
+        return {"config": config, "error": f"{type(e).__name__}: {e}",
+                "verified": False, "iis": {}, "lut": 0, "ff": 0, "dsp": 0,
+                "bram": 0, "latency_cycles": None, "latency_ns": None}
+
+
+def _expected_sweep_errors() -> tuple:
+    """Failures a DSE candidate can legitimately produce — malformed knob
+    combinations, infeasible schedules, verification mismatches — and that
+    therefore score the candidate out while the sweep continues.  Resolved
+    lazily to keep worker-side imports (pickle-by-reference) cycle-free."""
+    from ..lower.to_sim import SimulationError
+    from ..parser import ParseError
+    from ..verifier import VerifyError
+    return (ParseError, VerifyError, SimulationError, ValueError, KeyError,
+            IndexError, NotImplementedError, AssertionError, ZeroDivisionError)
 
 
 def _map_candidates(payloads: list, max_workers: int,
@@ -632,7 +654,14 @@ def _cheap_score_candidate(payload) -> dict:
                 "est_latency_ns": float(span) * config.clock_ns,
                 "est_lut": est["lut"], "est_ff": est["ff"],
                 "est_dsp": est["dsp"]}
-    except Exception as e:
+    except MemoryError:
+        raise  # resource exhaustion must abort the rung, not score a point
+    except _expected_sweep_errors() as e:
+        return {"config": config, "error": f"{type(e).__name__}: {e}"}
+    except Exception as e:  # unexpected: still score out, but loudly
+        warnings.warn(
+            f"DSE cheap-score raised unexpected {type(e).__name__}: {e}",
+            RuntimeWarning, stacklevel=2)
         return {"config": config, "error": f"{type(e).__name__}: {e}"}
 
 
@@ -971,6 +1000,8 @@ class DiskCompileCache:
         from ..codegen.verilog import VerilogModule
         from ..parser import parse
 
+        from ..parser import ParseError
+
         p = self._path(key)
         try:
             blob = pickle.loads(p.read_bytes())
@@ -978,7 +1009,11 @@ class DiskCompileCache:
             netlists = {name: VerilogModule(name, text, nl, None, bk)
                         for name, text, bk, nl in blob["netlists"]}
             meta = blob["meta"]
-        except Exception:
+        except (OSError, EOFError, pickle.PickleError, KeyError, ValueError,
+                TypeError, ParseError):
+            # absent, truncated, stale-format, or corrupted entry: a disk
+            # cache may always miss; anything else (MemoryError, bugs in
+            # parse) propagates
             self.misses += 1
             return None
         try:

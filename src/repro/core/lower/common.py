@@ -1,0 +1,132 @@
+"""Shared primitive tables for the HIR <-> JAX lowering boundary.
+
+Three components speak both HIR and JAX:
+
+  * ``lower/to_jax.py``   — HIR -> pure JAX (algorithm extraction),
+  * ``lower/to_pallas.py`` — HIR -> Pallas TPU kernel (hardware adaptation),
+  * ``frontend/``          — JAX -> HIR (the tracer, the mirror image).
+
+Each used to carry its own copy of the HIR-arith-op -> jnp implementation
+table and its own dtype policy; they are lifted here so the three stay in
+lockstep (adding an HIR arith op is a one-table change) and so the dtype
+*coercion policy* is explicit instead of scattered.
+
+Dtype policy
+------------
+``np_dtype`` is the faithful mapping used by the functional (to_jax)
+lowering: every HIR type maps to a JAX dtype that can represent it
+losslessly (``f64 -> float64``).
+
+``pallas_dtype`` is the TPU mapping used by the Pallas lowering, where the
+hardware-supported set is narrower.  Coercions are explicit:
+
+  * ``f64`` RAISES ``TypeError`` by default — TPU VMEM kernels compute in
+    f32 and a silent f64 -> f32 downcast corrupts precision-sensitive
+    designs.  Pass ``allow_downcast=True`` to opt in (a
+    ``PrecisionWarning`` is still emitted).
+  * ``f16`` maps to ``bfloat16`` (TPU-native) with a ``PrecisionWarning``:
+    same width, different mantissa/exponent split.
+  * integer types map to ``int32`` (HIR ints are <= 32 bits in this flow).
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Any
+
+from .. import ir
+
+
+class PrecisionWarning(UserWarning):
+    """A lowering changed numeric precision/format (e.g. f16 -> bf16)."""
+
+
+def np_dtype(t: ir.Type):
+    """Faithful HIR type -> jnp dtype (functional lowering)."""
+    import jax.numpy as jnp
+
+    if isinstance(t, ir.IntType):
+        return jnp.int32 if t.width <= 32 else jnp.int64
+    if isinstance(t, ir.FloatType):
+        return {16: jnp.bfloat16, 32: jnp.float32, 64: jnp.float64}[t.width]
+    raise TypeError(t)
+
+
+def pallas_dtype(t: ir.Type, allow_downcast: bool = False):
+    """TPU (Pallas) HIR type -> jnp dtype with an explicit coercion policy.
+
+    Raises ``TypeError`` on ``f64`` unless ``allow_downcast=True``; warns
+    (``PrecisionWarning``) on any lossy/format-changing coercion."""
+    import jax.numpy as jnp
+
+    if isinstance(t, ir.IntType):
+        return jnp.int32
+    if isinstance(t, ir.FloatType):
+        if t.width == 64:
+            if not allow_downcast:
+                raise TypeError(
+                    "f64 memrefs cannot be lowered to a Pallas TPU kernel "
+                    "without loss (VMEM compute is f32); pass "
+                    "allow_downcast=True to lower_to_pallas to accept the "
+                    "f64 -> f32 coercion explicitly")
+            warnings.warn("lowering f64 -> f32 for Pallas (allow_downcast)",
+                          PrecisionWarning, stacklevel=2)
+            return jnp.float32
+        if t.width == 16:
+            warnings.warn(
+                "lowering f16 -> bfloat16 for Pallas (TPU-native 16-bit "
+                "float; mantissa precision differs)",
+                PrecisionWarning, stacklevel=2)
+            return jnp.bfloat16
+        return jnp.float32
+    raise TypeError(t)
+
+
+def jnp_arith_table() -> dict[str, Any]:
+    """HIR arith op name -> jnp implementation.
+
+    Works on both jnp arrays and python scalars (the to_jax lowering feeds
+    it python ints for constant operands).  Division is *floor* division on
+    integers — matching the RTL semantics (signed floor div) on the domains
+    where both are defined; see the frontend docs for the x/0 caveat."""
+    import jax.numpy as jnp
+
+    def _as_i32(x):
+        return x.astype(jnp.int32) if hasattr(x, "astype") else int(x)
+
+    return {
+        "add": lambda a, b: a + b,
+        "sub": lambda a, b: a - b,
+        "mult": lambda a, b: a * b,
+        "div": lambda a, b: (a // b
+                             if jnp.issubdtype(jnp.result_type(a), jnp.integer)
+                             else a / b),
+        "and": lambda a, b: a & b,
+        "or": lambda a, b: a | b,
+        "xor": lambda a, b: a ^ b,
+        "not": lambda a: ~a,
+        "shl": lambda a, b: a << b,
+        "shr": lambda a, b: a >> b,
+        "cmp_lt": lambda a, b: _as_i32(a < b),
+        "cmp_le": lambda a, b: _as_i32(a <= b),
+        "cmp_eq": lambda a, b: _as_i32(a == b),
+        "cmp_ne": lambda a, b: _as_i32(a != b),
+        "cmp_gt": lambda a, b: _as_i32(a > b),
+        "cmp_ge": lambda a, b: _as_i32(a >= b),
+        "select": lambda c, a, b: jnp.where(jnp.asarray(c) != 0, a, b),
+        "trunc": lambda a: a,
+        "zext": lambda a: a,
+        "sext": lambda a: a,
+    }
+
+
+#: ops with memory/timing effects — everything else is pure SSA dataflow
+EFFECTFUL_OPS = ("mem_read", "mem_write", "call", "for", "unroll_for")
+
+
+def schedule_key(op: ir.Operation) -> tuple:
+    """Schedule-order sort key: start offset, reads before writes on cycle
+    ties (the hardware read phase samples pre-write state)."""
+    off = op.start.offset if op.start is not None else 0
+    rw = 0 if op.opname == "mem_read" else 1
+    return (off, rw)

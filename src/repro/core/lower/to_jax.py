@@ -25,43 +25,9 @@ from typing import Any, Callable, Optional
 
 from .. import ir
 from ..ir import ForOp, FuncOp, MemrefType, Module, Operation, Region, Value
-
-
-def _np_dtype(t: ir.Type):
-    import jax.numpy as jnp
-
-    if isinstance(t, ir.IntType):
-        return jnp.int32 if t.width <= 32 else jnp.int64
-    if isinstance(t, ir.FloatType):
-        return {16: jnp.bfloat16, 32: jnp.float32, 64: jnp.float64}[t.width]
-    raise TypeError(t)
-
-
-def _jax_arith():
-    import jax.numpy as jnp
-
-    return {
-        "add": lambda a, b: a + b,
-        "sub": lambda a, b: a - b,
-        "mult": lambda a, b: a * b,
-        "div": lambda a, b: a // b if jnp.issubdtype(jnp.result_type(a), jnp.integer) else a / b,
-        "and": lambda a, b: a & b,
-        "or": lambda a, b: a | b,
-        "xor": lambda a, b: a ^ b,
-        "not": lambda a: ~a,
-        "shl": lambda a, b: a << b,
-        "shr": lambda a, b: a >> b,
-        "cmp_lt": lambda a, b: (a < b).astype(jnp.int32) if hasattr(a < b, "astype") else int(a < b),
-        "cmp_le": lambda a, b: (a <= b).astype(jnp.int32) if hasattr(a <= b, "astype") else int(a <= b),
-        "cmp_eq": lambda a, b: (a == b).astype(jnp.int32) if hasattr(a == b, "astype") else int(a == b),
-        "cmp_ne": lambda a, b: (a != b).astype(jnp.int32) if hasattr(a != b, "astype") else int(a != b),
-        "cmp_gt": lambda a, b: (a > b).astype(jnp.int32) if hasattr(a > b, "astype") else int(a > b),
-        "cmp_ge": lambda a, b: (a >= b).astype(jnp.int32) if hasattr(a >= b, "astype") else int(a >= b),
-        "select": lambda c, a, b: jnp.where(jnp.asarray(c) != 0, a, b),
-        "trunc": lambda a: a,
-        "zext": lambda a: a,
-        "sext": lambda a: a,
-    }
+from .common import jnp_arith_table as _jax_arith
+from .common import np_dtype as _np_dtype
+from .common import schedule_key as _schedule_key  # noqa: F401  (re-export)
 
 
 class _Thunk:
@@ -96,13 +62,7 @@ class _Env:
         self.vals[v] = x
 
 
-def _schedule_key(op: Operation) -> tuple:
-    off = op.start.offset if op.start is not None else 0
-    rw = 0 if op.opname == "mem_read" else 1  # reads sample pre-write state
-    return (off, rw)
-
-
-_EFFECTFUL = ("mem_read", "mem_write", "call", "for", "unroll_for")
+from .common import EFFECTFUL_OPS as _EFFECTFUL  # noqa: E402
 
 
 class _Lowerer:

@@ -36,39 +36,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .. import ir
 from ..ir import ForOp, MemrefType, Module, Operation, Region, Value
-from .to_jax import _schedule_key  # reads-before-writes schedule ordering
+from .common import (EFFECTFUL_OPS as _EFFECTFUL, jnp_arith_table,
+                     pallas_dtype as _dtype, schedule_key as _schedule_key)
 
-
-def _dtype(t: ir.Type):
-    if isinstance(t, ir.IntType):
-        return jnp.int32
-    if isinstance(t, ir.FloatType):
-        return {16: jnp.bfloat16, 32: jnp.float32, 64: jnp.float32}[t.width]
-    raise TypeError(t)
-
-
-_ARITH = {
-    "add": lambda a, b: a + b,
-    "sub": lambda a, b: a - b,
-    "mult": lambda a, b: a * b,
-    "div": lambda a, b: a // b,
-    "and": lambda a, b: a & b,
-    "or": lambda a, b: a | b,
-    "xor": lambda a, b: a ^ b,
-    "not": lambda a: ~a,
-    "shl": lambda a, b: a << b,
-    "shr": lambda a, b: a >> b,
-    "cmp_lt": lambda a, b: (a < b).astype(jnp.int32),
-    "cmp_le": lambda a, b: (a <= b).astype(jnp.int32),
-    "cmp_eq": lambda a, b: (a == b).astype(jnp.int32),
-    "cmp_ne": lambda a, b: (a != b).astype(jnp.int32),
-    "cmp_gt": lambda a, b: (a > b).astype(jnp.int32),
-    "cmp_ge": lambda a, b: (a >= b).astype(jnp.int32),
-    "select": lambda c, a, b: jnp.where(c != 0, a, b),
-    "trunc": lambda a: a, "zext": lambda a: a, "sext": lambda a: a,
-}
-
-_EFFECTFUL = ("mem_read", "mem_write", "call", "for", "unroll_for")
+_ARITH = jnp_arith_table()
 _PURE = set(_ARITH) | {"delay", "constant"}
 
 
@@ -151,12 +122,17 @@ class _KernelInterp:
 
 def lower_to_pallas(module: Module, func_name: str, *,
                     interpret: bool = True,
-                    pipeline: Optional[str] = None) -> Callable:
+                    pipeline: Optional[str] = None,
+                    allow_downcast: bool = False) -> Callable:
     """Lower ``@func_name`` to a callable mapping input arrays (one per
     read-port memref arg) to a dict of output arrays (write-port args).
 
     ``pipeline`` optionally names a ``PassManager`` spec run on ``module``
-    (in place) before lowering, mirroring ``lower_to_jax``."""
+    (in place) before lowering, mirroring ``lower_to_jax``.
+
+    Dtype policy (see ``lower.common.pallas_dtype``): ``f64`` memrefs raise
+    ``TypeError`` unless ``allow_downcast=True`` (TPU VMEM compute is f32);
+    ``f16`` maps to TPU-native ``bfloat16`` with a ``PrecisionWarning``."""
     if pipeline:
         from ..passmgr import PassManager
 
@@ -206,9 +182,11 @@ def lower_to_pallas(module: Module, func_name: str, *,
         def _epilogue():
             _KernelInterp(module, ref_of).run_effects(epilogue)
 
-    out_shapes = [jax.ShapeDtypeStruct(a.type.shape, _dtype(a.type.elem))
+    out_shapes = [jax.ShapeDtypeStruct(a.type.shape,
+                                       _dtype(a.type.elem, allow_downcast))
                   for a in out_args]
-    scratch = [pltpu.VMEM(al.attrs["base"].shape, _dtype(al.attrs["base"].elem))
+    scratch = [pltpu.VMEM(al.attrs["base"].shape,
+                          _dtype(al.attrs["base"].elem, allow_downcast))
                for al in allocs]
 
     def _full_spec(shape):
@@ -217,7 +195,7 @@ def lower_to_pallas(module: Module, func_name: str, *,
 
     def fn(*arrays):
         assert len(arrays) == len(in_args), (len(arrays), len(in_args))
-        ins = [jnp.asarray(x).astype(_dtype(a.type.elem))
+        ins = [jnp.asarray(x).astype(_dtype(a.type.elem, allow_downcast))
                for x, a in zip(arrays, in_args)]
         outs = pl.pallas_call(
             kernel,

@@ -57,7 +57,9 @@ def _fold(opname: str, vals: list) -> Optional[int]:
             return vals[1] if vals[0] else vals[2]
         if opname in ("trunc", "zext", "sext", "not"):
             return ~vals[0] if opname == "not" else vals[0]
-    except Exception:
+    except (ZeroDivisionError, OverflowError, TypeError, ValueError):
+        # arithmetic on the literal operands failed (e.g. div by const 0,
+        # or a non-integer attr leaked in) — simply decline to fold
         return None
     return None
 

@@ -27,7 +27,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                   scale: float, causal: bool, window: Optional[int],
-                  bq: int, bk: int, kv_steps: int):
+                  kv_len: Optional[int], bq: int, bk: int, kv_steps: int):
     qi, ki = pl.program_id(2), pl.program_id(3)
 
     @pl.when(ki == 0)
@@ -47,6 +47,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         valid &= k_pos <= q_pos
     if window is not None:
         valid &= k_pos > q_pos - window
+    if kv_len is not None:
+        # keys at positions >= kv_len are padding and must never attend —
+        # causal masking alone admits them whenever q_pos >= k_pos
+        valid &= k_pos < kv_len
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev, l_prev = m_ref[...], l_ref[...]
@@ -67,20 +71,31 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: Optional[int] = None,
                     scale: Optional[float] = None,
+                    kv_len: Optional[int] = None,
                     bq: int = 256, bk: int = 256,
                     interpret: bool = False):
     """q: (B, H, Sq, D); k,v: (B, KvH, Sk, D) with H % KvH == 0.
-    Sq/Sk must tile by bq/bk (``ops.mha`` pads)."""
+    Sq/Sk must tile by bq/bk (``ops.mha`` pads).  ``kv_len`` marks the
+    number of *valid* key positions: keys at positions >= kv_len (padding
+    appended by the wrapper) are masked out of the softmax."""
     B, H, Sq, D = q.shape
     _, KvH, Sk, _ = k.shape
-    assert H % KvH == 0, (H, KvH)
+    if H % KvH != 0:
+        raise ValueError(
+            f"flash_attention: H={H} must be a multiple of KvH={KvH}")
     group = H // KvH
     bq, bk = min(bq, Sq), min(bk, Sk)
+    if Sq % bq != 0 or Sk % bk != 0:
+        raise ValueError(
+            f"flash_attention: Sq={Sq}/Sk={Sk} must tile by bq={bq}/bk={bk} "
+            "(pad inputs or use ops.mha, which pads and sets kv_len)")
+    if kv_len is not None and not 0 < kv_len <= Sk:
+        raise ValueError(f"flash_attention: kv_len={kv_len} outside (0, {Sk}]")
     sc = scale if scale is not None else D ** -0.5
     grid = (B, H, Sq // bq, Sk // bk)
     return pl.pallas_call(
         partial(_flash_kernel, scale=sc, causal=causal, window=window,
-                bq=bq, bk=bk, kv_steps=grid[3]),
+                kv_len=kv_len, bq=bq, bk=bk, kv_steps=grid[3]),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),

@@ -65,18 +65,13 @@ def mha(q, k, v, *, causal: bool = True, window: Optional[int] = None,
     qp = _pad_to(qt, 2, bq_)
     kp = _pad_to(kt, 2, bk_)
     vp = _pad_to(vt, 2, bk_)
-    # padded KV columns must not attend: keys at positions >= Sk are masked by
-    # the causal test only if Sq==Sk; otherwise mask via window on q_pos —
-    # handled inside the kernel by position arithmetic, so clamp here:
-    if qp.shape[2] != Sq or kp.shape[2] != Sk:
-        # mark padded keys with +inf positions by zeroing v and relying on
-        # causal masking when q_pos < k_pos; for the non-causal case fall
-        # back to masking after the fact is wrong — so require causal or
-        # exact tiling for now (ops-level contract).
-        assert causal or (qp.shape[2] == Sq and kp.shape[2] == Sk), \
-            "non-causal mha requires seq multiples of the block size"
+    # keys appended by padding must never attend; causal masking alone does
+    # not exclude them (any q_pos >= Sk admits key positions in [Sk, padded)),
+    # so tell the kernel the true key length and let it mask by position
+    kv_len = Sk if kp.shape[2] != Sk else None
     out = _fa.flash_attention(qp, kp, vp, causal=causal, window=window,
-                              bq=bq_, bk=bk_, interpret=_interpret())
+                              kv_len=kv_len, bq=bq_, bk=bk_,
+                              interpret=_interpret())
     return jnp.swapaxes(out[:, :, :Sq], 1, 2)
 
 

@@ -1,0 +1,160 @@
+"""Fatal errors must not be swallowed by containment handlers.
+
+The compiler has a handful of places that deliberately contain failures —
+const-folding declines to fold, the DSE sweep scores a candidate out, the
+disk cache misses, the pool mapper falls back to serial.  Each of those
+handlers is narrowed to the failures it actually expects; this suite pins
+the other side of the contract: ``MemoryError`` / ``KeyboardInterrupt``
+(and plain bugs, where the policy is warn-and-contain) escape.
+"""
+
+from __future__ import annotations
+
+import pickle
+import warnings
+
+import pytest
+
+from repro.core.hls.dse import (
+    DSEConfig,
+    DiskCompileCache,
+    _cheap_score_candidate,
+    _evaluate_candidate,
+)
+from repro.core.passes.canonicalize import _fold
+from repro.core.pool import POOL_FALLBACK_ERRORS, pool_map
+
+
+class _Fatal:
+    """Operand whose arithmetic raises a chosen fatal error."""
+
+    def __init__(self, exc):
+        self.exc = exc
+
+    def __add__(self, other):
+        raise self.exc
+
+
+# -- const folding ------------------------------------------------------------
+
+
+def test_fold_declines_on_expected_arith_errors():
+    assert _fold("div", [1, 0]) is None
+    assert _fold("add", [1, object()]) is None
+
+
+@pytest.mark.parametrize("exc", [MemoryError, KeyboardInterrupt])
+def test_fold_does_not_swallow_fatal(exc):
+    with pytest.raises(exc):
+        _fold("add", [_Fatal(exc("boom")), 1])
+
+
+def test_legacy_sweep_fold_matches_policy():
+    from repro.core.passes.legacy_sweep import _fold as _legacy_fold
+
+    assert _legacy_fold("div", [1, 0]) is None
+    with pytest.raises(MemoryError):
+        _legacy_fold("add", [_Fatal(MemoryError("boom")), 1])
+
+
+# -- pool mapper --------------------------------------------------------------
+
+
+def _oom_worker(x):
+    raise MemoryError("worker oom")
+
+
+def test_pool_fallback_errors_exclude_fatal():
+    assert MemoryError not in POOL_FALLBACK_ERRORS
+    assert KeyboardInterrupt not in POOL_FALLBACK_ERRORS
+
+
+def test_pool_map_reraises_worker_memoryerror():
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            res = pool_map(_oom_worker, [1, 2], 2, label="policy test")
+    except MemoryError:
+        return  # worker's own error propagated — the contract under test
+    if res is None:
+        pytest.skip("no process pool available in this environment")
+    pytest.fail(f"worker MemoryError was swallowed; got {res!r}")
+
+
+# -- DSE candidate workers ----------------------------------------------------
+
+_BAD_TEXT = "this is not hir"
+
+
+def _payload_full():
+    return (_BAD_TEXT, "main", DSEConfig(), None, None, None)
+
+
+def _payload_cheap():
+    return (_BAD_TEXT, "main", DSEConfig())
+
+
+def test_dse_candidate_scores_out_parse_error():
+    row = _evaluate_candidate(_payload_full())
+    assert row["error"] and "ParseError" in row["error"]
+    row = _cheap_score_candidate(_payload_cheap())
+    assert row["error"] and "ParseError" in row["error"]
+
+
+@pytest.mark.parametrize("exc", [MemoryError, KeyboardInterrupt])
+def test_dse_candidate_reraises_fatal(monkeypatch, exc):
+    import repro.core.parser as parser_mod
+
+    def boom(text):
+        raise exc("boom")
+
+    monkeypatch.setattr(parser_mod, "parse", boom)
+    with pytest.raises(exc):
+        _evaluate_candidate(_payload_full())
+    with pytest.raises(exc):
+        _cheap_score_candidate(_payload_cheap())
+
+
+def test_dse_candidate_warns_on_unexpected_error(monkeypatch):
+    import repro.core.parser as parser_mod
+
+    def boom(text):
+        raise RuntimeError("compiler bug")
+
+    monkeypatch.setattr(parser_mod, "parse", boom)
+    with pytest.warns(RuntimeWarning, match="unexpected RuntimeError"):
+        row = _evaluate_candidate(_payload_full())
+    assert "RuntimeError" in row["error"]
+    with pytest.warns(RuntimeWarning, match="unexpected RuntimeError"):
+        row = _cheap_score_candidate(_payload_cheap())
+    assert "RuntimeError" in row["error"]
+
+
+# -- disk compile cache -------------------------------------------------------
+
+
+def test_disk_cache_corrupt_entry_is_a_miss(tmp_path):
+    cache = DiskCompileCache(tmp_path)
+    key = "deadbeef"
+    cache._path(key).write_bytes(b"not a pickle")
+    assert cache.get(key) is None
+    assert cache.misses == 1
+    # a well-formed pickle missing the expected keys is also just a miss
+    cache._path(key).write_bytes(pickle.dumps({"wrong": "shape"}))
+    assert cache.get(key) is None
+    assert cache.misses == 2
+
+
+def test_disk_cache_does_not_swallow_fatal(tmp_path, monkeypatch):
+    import repro.core.hls.dse as dse_mod
+
+    cache = DiskCompileCache(tmp_path)
+    key = "deadbeef"
+    cache._path(key).write_bytes(b"whatever")
+
+    def boom(blob):
+        raise MemoryError("boom")
+
+    monkeypatch.setattr(dse_mod.pickle, "loads", boom)
+    with pytest.raises(MemoryError):
+        cache.get(key)

@@ -1,0 +1,215 @@
+"""Conformance suite for the JAX -> HIR frontend tracer.
+
+The traced workloads are held to the same bar as the hand-written gallery:
+the printed module round-trips through the parser, the RTL differential
+harness checks them against their NumPy oracles on >= 256 stimulus vectors
+in both emission hierarchies, and they flow through ``hls_compile`` /
+``explore_design`` with correct cache keying.  Plus the frontend's error
+contract: unsupported primitives and non-integer dtypes fail at trace time
+with actionable messages, never silently mislower.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.codegen import sim as rsim
+from repro.core.frontend import (
+    FRONTEND_WORKLOADS,
+    FrontendError,
+    SUPPORTED_PRIMITIVES,
+    UnsupportedPrimitiveError,
+    trace,
+)
+from repro.core.gallery import GALLERY
+from repro.core.hls import erase_schedule, hls_compile
+from repro.core.hls.dse import (
+    DSEConfig,
+    explore_design,
+    fingerprint_module,
+)
+from repro.core.parser import parse
+from repro.core.printer import print_module
+
+N_VECTORS = 256
+HIERARCHIES = ["inline", "modules"]
+
+
+# ---------------------------------------------------------------------------
+# structure: build / round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(FRONTEND_WORKLOADS))
+def test_traced_module_prints_and_parses(name):
+    mod, entry = FRONTEND_WORKLOADS[name].build()
+    assert entry == name
+    text = print_module(mod)
+    again = parse(text)
+    assert print_module(again) == text
+
+
+@pytest.mark.parametrize("name", sorted(FRONTEND_WORKLOADS))
+def test_traced_module_is_scheduled(name):
+    # every op the scheduler touches carries a concrete start time
+    mod, _ = FRONTEND_WORKLOADS[name].build()
+    text = print_module(mod)
+    assert "offset ?" not in text
+
+
+def test_frontend_workloads_registered_in_gallery():
+    for name in FRONTEND_WORKLOADS:
+        assert name in GALLERY
+        assert GALLERY[name] is FRONTEND_WORKLOADS[name]
+
+
+# ---------------------------------------------------------------------------
+# differential: traced hardware vs the JAX program's NumPy oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("hierarchy", HIERARCHIES)
+@pytest.mark.parametrize("name", sorted(FRONTEND_WORKLOADS))
+def test_traced_differential(name, hierarchy):
+    wl = FRONTEND_WORKLOADS[name]
+    mod, entry = wl.build()
+    batch = rsim.stack_stimulus(wl.make_inputs, N_VECTORS, base_seed=7)
+    rep = rsim.run_differential(mod, entry, batch, kernel=name,
+                                hierarchy=hierarchy, oracle=wl.oracle,
+                                oracle_nargs=len(batch) - 1)
+    assert rep.ok, (name, hierarchy, rep.mismatches[:5])
+    assert rep.n_vectors == N_VECTORS
+    assert rep.oracle_ok is True
+    assert rep.passes_ok and all(rep.passes_ok.values()), rep.passes_ok
+
+
+@pytest.mark.parametrize("name", sorted(FRONTEND_WORKLOADS))
+def test_traced_differential_smoke(name):
+    # fast-lane version of the matrix above: 16 vectors, inline hierarchy
+    wl = FRONTEND_WORKLOADS[name]
+    mod, entry = wl.build()
+    batch = rsim.stack_stimulus(wl.make_inputs, 16, base_seed=3)
+    rep = rsim.run_differential(mod, entry, batch, kernel=name,
+                                oracle=wl.oracle,
+                                oracle_nargs=len(batch) - 1)
+    assert rep.ok and rep.oracle_ok, (name, rep.mismatches[:5])
+
+
+def test_matmul_tile_knob_preserves_semantics():
+    # tile divides n -> banked accumulator; tile=1 -> plain nest; same math
+    wl = FRONTEND_WORKLOADS["frontend_matmul"]
+    a, b, _ = wl.make_inputs(seed=42)
+    want = wl.oracle(a, b)
+    for tile in (1, 2, 4):
+        mod, entry = wl.build(tile=tile)
+        from repro.core.lower import simulate
+
+        args = [a.copy(), b.copy(), np.zeros_like(want)]
+        simulate(mod, entry, args)
+        np.testing.assert_array_equal(args[-1], want), tile
+
+
+# ---------------------------------------------------------------------------
+# error contract
+# ---------------------------------------------------------------------------
+
+
+def test_unsupported_primitive_names_itself():
+    import jax.numpy as jnp
+
+    with pytest.raises(UnsupportedPrimitiveError, match="argmax"):
+        trace(lambda x: jnp.argmax(x), [(8,)], name="bad")
+    with pytest.raises(UnsupportedPrimitiveError, match="sort"):
+        trace(lambda x: jnp.sort(x), [(8,)], name="bad")
+
+
+def test_unsupported_primitive_lists_supported_set():
+    import jax.numpy as jnp
+
+    with pytest.raises(UnsupportedPrimitiveError,
+                       match="supported primitives are"):
+        trace(lambda x: jnp.sort(x), [(8,)], name="bad")
+    assert "dot_general" in SUPPORTED_PRIMITIVES
+    assert "reduce_sum" in SUPPORTED_PRIMITIVES
+
+
+def test_float_program_rejected_at_trace_time():
+    import jax.numpy as jnp
+
+    with pytest.raises(FrontendError, match="integer-only"):
+        trace(lambda x: x.astype(jnp.float32) * 1.5, [(8,)], name="bad")
+
+
+def test_unsupported_error_is_a_not_implemented_error():
+    # callers can catch the stdlib category without importing the frontend
+    assert issubclass(UnsupportedPrimitiveError, FrontendError)
+    assert issubclass(FrontendError, NotImplementedError)
+
+
+# ---------------------------------------------------------------------------
+# cache keying: fingerprints must separate what the scheduler must not share
+# ---------------------------------------------------------------------------
+
+
+def test_trace_fingerprint_deterministic():
+    m1, _ = FRONTEND_WORKLOADS["frontend_scan"].build()
+    m2, _ = FRONTEND_WORKLOADS["frontend_scan"].build()
+    assert fingerprint_module(erase_schedule(m1)) == \
+        fingerprint_module(erase_schedule(m2))
+
+
+def test_trace_fingerprint_varies_with_shape_and_tile():
+    wl = FRONTEND_WORKLOADS["frontend_matmul"]
+    base = fingerprint_module(erase_schedule(wl.build()[0]))
+    other_shape = fingerprint_module(erase_schedule(wl.build(m=8, k=8, n=8)[0]))
+    other_tile = fingerprint_module(erase_schedule(wl.build(tile=4)[0]))
+    assert base != other_shape
+    assert base != other_tile
+
+
+def test_gallery_fingerprints_all_distinct():
+    prints = {name: fingerprint_module(erase_schedule(gal.build()[0]))
+              for name, gal in GALLERY.items()}
+    assert len(set(prints.values())) == len(prints), prints
+
+
+def test_hls_compile_cache_hits_and_misses():
+    wl = FRONTEND_WORKLOADS["frontend_scan"]
+    um = erase_schedule(wl.build()[0])
+    res1, _ = hls_compile(um, entry="frontend_scan")
+    res2, _ = hls_compile(erase_schedule(wl.build()[0]),
+                          entry="frontend_scan")
+    assert res2.from_cache  # identical retrace -> whole-module cache hit
+    um3 = erase_schedule(wl.build(n=16)[0])
+    res3, _ = hls_compile(um3, entry="frontend_scan")
+    assert not res3.from_cache  # different trace shape -> different key
+
+
+# ---------------------------------------------------------------------------
+# downstream integration: compile + DSE
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(FRONTEND_WORKLOADS))
+def test_traced_module_compiles_to_rtl(name):
+    wl = FRONTEND_WORKLOADS[name]
+    um = erase_schedule(wl.build()[0])
+    res, netlists = hls_compile(um, entry=name, cache=False)
+    assert name in netlists
+    assert netlists[name].text.strip()
+
+
+@pytest.mark.slow
+def test_traced_module_explores_design_space():
+    wl = FRONTEND_WORKLOADS["frontend_scan"]
+    mod, entry = wl.build()
+    ins = wl.make_inputs(seed=5)
+    exp = wl.oracle(*ins[:2])
+    space = [DSEConfig(clock_ns=10.0), DSEConfig(clock_ns=5.0)]
+    res = explore_design(mod, space, entry=entry, inputs=ins, expected=exp)
+    assert len(res.points) == len(space)
+    assert all(p.verified for p in res.points), \
+        [p.error for p in res.points if not p.verified]
+    assert res.front

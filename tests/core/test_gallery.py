@@ -36,6 +36,7 @@ def test_simulation_matches_oracle(name):
     np.testing.assert_array_equal(ins[-1], _expected(name, ins))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(ORACLE_NARGS))
 def test_functional_jax_lowering_matches_oracle(name):
     mod = GALLERY[name]

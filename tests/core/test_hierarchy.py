@@ -73,6 +73,7 @@ def test_inline_mode_still_flattens():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(ORACLE_NARGS))
 def test_hierarchical_emission_preserves_semantics(name):
     """generate_verilog(hierarchy="modules") mutates the module (unroll +

@@ -36,6 +36,7 @@ KERNELS = {
 HIERARCHIES = ["inline", "modules"]
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("hierarchy", HIERARCHIES)
 @pytest.mark.parametrize("kernel", sorted(KERNELS))
 def test_gallery_differential(kernel, hierarchy):

@@ -45,6 +45,7 @@ def _innermost_for_loops(func):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", sorted(ORACLE_NARGS))
 def test_transforms_preserve_sim_vs_jax_agreement(name):
     mod = GALLERY[name]

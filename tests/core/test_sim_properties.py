@@ -19,6 +19,9 @@ import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")
+
+# seed-pinned fuzz: runs in the CI differential-fuzz step and the full job
+pytestmark = pytest.mark.slow
 from hypothesis import given, seed, settings, strategies as st  # noqa: E402
 
 from repro.core import ir  # noqa: E402

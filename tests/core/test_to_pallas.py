@@ -79,3 +79,63 @@ def test_gemm_binds_to_mxu_kernel():
     got = ops.matmul(jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32),
                      bm=16, bn=16, bk=16)
     np.testing.assert_array_equal(np.asarray(got, np.int64), want)
+
+
+# -- dtype coercion policy ----------------------------------------------------
+
+
+def _build_float_add(elem):
+    """8-wide elementwise add over float memrefs (array_add shape)."""
+    from repro.core import ir
+    from repro.core.builder import Builder
+
+    b = Builder(ir.Module("fadd"))
+    r = ir.MemrefType((8,), elem, ir.PORT_R)
+    w = ir.MemrefType((8,), elem, ir.PORT_W)
+    with b.func("fadd", [r, r, w], ["A", "B", "C"]) as f:
+        A, B, C = f.args
+        with b.for_(0, 8, 1, at=f.t + 1, iv_name="i", tv_name="ti") as li:
+            b.yield_(at=li.time + 1)
+            a = b.read(A, [li.iv], at=li.time)
+            v = b.read(B, [li.iv], at=li.time)
+            c = b.add(a, v)
+            i1 = b.delay(li.iv, 1, at=li.time)
+            b.write(c, C, [i1], at=li.time + 1)
+        b.ret()
+    return b.module, "fadd"
+
+
+def test_pallas_f64_raises_by_default():
+    """The old behavior silently truncated f64 -> f32; now it is an error
+    unless the caller opts into the downcast explicitly."""
+    from repro.core import ir
+
+    module, name = _build_float_add(ir.FloatType(64))
+    with pytest.raises(TypeError, match="allow_downcast"):
+        lower_to_pallas(module, name)
+
+
+def test_pallas_f64_downcast_is_explicit_and_warned():
+    import warnings
+
+    from repro.core import ir
+    from repro.core.lower.common import PrecisionWarning
+
+    module, name = _build_float_add(ir.FloatType(64))
+    with pytest.warns(PrecisionWarning, match="f64 -> f32"):
+        fn = lower_to_pallas(module, name, allow_downcast=True)
+    a = np.arange(8.0)
+    b = 2.0 * np.arange(8.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PrecisionWarning)
+        out = fn(a, b)
+    np.testing.assert_allclose(np.asarray(out["C"], np.float64), a + b)
+
+
+def test_pallas_f16_maps_to_bf16_with_warning():
+    from repro.core import ir
+    from repro.core.lower.common import PrecisionWarning
+
+    module, name = _build_float_add(ir.FloatType(16))
+    with pytest.warns(PrecisionWarning, match="bfloat16"):
+        fn = lower_to_pallas(module, name)

@@ -205,3 +205,47 @@ def test_rglru_kernel_matches_model_scan():
     h = ops.rglru_scan(a, b, bs=16, bd=16)
     np.testing.assert_allclose(np.asarray(h), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# -- mha padded-KV masking (regression: padded keys used to attend) -----------
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("Sq,Sk", [
+    (80, 48),    # Sq != Sk, both ragged: causal admits k_pos in [48, 64)
+    (48, 48),    # ragged keys only
+])
+def test_mha_padded_kv_is_masked(causal, Sq, Sk):
+    """Keys appended by block padding must never attend.  The causal test
+    alone admits padded key positions whenever q_pos >= Sk (and non-causal
+    rows always would), so ``ops.mha`` must pass the true key length through
+    to the kernel's position mask."""
+    ks = jax.random.split(jax.random.key(11), 3)
+    B, H, D = 1, 2, 32
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, H, D))
+    v = jax.random.normal(ks[2], (B, Sk, H, D))
+    out = ops.mha(q, k, v, causal=causal, bq=32, bk=32)
+    want = ref.flash_attention_ref(jnp.swapaxes(q, 1, 2),
+                                   jnp.swapaxes(k, 1, 2),
+                                   jnp.swapaxes(v, 1, 2), causal=causal)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.swapaxes(want, 1, 2)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_contract_errors_survive_optimization():
+    """The shape contracts are ValueErrors, not asserts: they must hold even
+    under ``python -O`` (which strips assert statements)."""
+    from repro.kernels import flash_attention as fa
+    q = jnp.zeros((1, 3, 64, 16))   # H=3
+    kv = jnp.zeros((1, 2, 64, 16))  # KvH=2 does not divide H
+    with pytest.raises(ValueError, match="multiple of KvH"):
+        fa.flash_attention(q, kv, kv, interpret=True)
+    q = jnp.zeros((1, 2, 48, 16))   # Sq=48 does not tile by bq=32
+    kv = jnp.zeros((1, 2, 64, 16))
+    with pytest.raises(ValueError, match="must tile"):
+        fa.flash_attention(q, kv, kv, bq=32, bk=32, interpret=True)
+    q = jnp.zeros((1, 2, 64, 16))
+    with pytest.raises(ValueError, match="kv_len"):
+        fa.flash_attention(q, kv, kv, kv_len=65, interpret=True)
