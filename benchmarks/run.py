@@ -8,9 +8,12 @@ report mandated by the assignment:
   precision_opt    paper Table 4 (precision-opt ablation)
   roofline         EXPERIMENTS §Roofline source (reads dry-run artifacts)
   sim_throughput   vectorized vs event-driven simulation throughput
+  sharing          cross-instance time-multiplexing resources + verification
 
 ``python -m benchmarks.run [name ...]`` runs all (or the named) benchmarks
-and writes artifacts/bench/<name>.json.  ``--only a,b`` / ``--skip x,y``
+and writes artifacts/bench/BENCH_<name>.json (the same naming every
+self-writing suite uses, so the artifacts directory holds exactly one file
+per benchmark).  ``--only a,b`` / ``--skip x,y``
 filter the suite list (combinable with positional names); a failing
 benchmark is reported and turns the final exit status nonzero instead of
 silently passing, so CI perf-smoke steps can gate on it.  ``--profile``
@@ -60,7 +63,8 @@ def main(argv=None) -> int:
     only = _split_opt(argv, "--only")
     skip = _split_opt(argv, "--skip")
     from . import (codegen_scaling, codegen_speed, dse, incremental,
-                   precision_opt, resource_usage, roofline, sim_throughput)
+                   precision_opt, resource_usage, roofline, sharing,
+                   sim_throughput)
 
     suites = {
         "codegen_speed": codegen_speed,
@@ -71,6 +75,7 @@ def main(argv=None) -> int:
         "precision_opt": precision_opt,
         "roofline": roofline,
         "sim_throughput": sim_throughput,
+        "sharing": sharing,
     }
     passthrough = [a for a in argv if a.startswith("--")]
     argv = [a for a in argv if not a.startswith("--")]
@@ -111,7 +116,7 @@ def main(argv=None) -> int:
         dt = time.time() - t0
         print(f"({name}: {dt:.1f}s)")
         if rows and not isinstance(rows, int):
-            (ARTIFACTS / f"{name}.json").write_text(
+            (ARTIFACTS / f"BENCH_{name}.json").write_text(
                 json.dumps(rows, indent=2, default=str))
     if failed:
         print(f"\nFAILED benchmarks: {', '.join(failed)}")

@@ -6,7 +6,7 @@ from .backends import (BACKENDS, CIRCTPrinter, NetlistPrinter,  # noqa: F401
 from .verilog import (Netlist, VerilogModule, generate_verilog,  # noqa: F401
                       lower_to_rtl, netlist_of)
 from .resources import (ResourceReport, estimate_resources,  # noqa: F401
-                        report_design, report_module)
+                        report_design, report_module, sharing_summary)
 from .lint import (DIALECT_LINTERS, lint_backend, lint_circt,  # noqa: F401
                    lint_systemverilog, lint_verilog, lint_vhdl)
 from .sim import (HAVE_JAX, DiffReport, RTLSimError, RTLSimulator,  # noqa: F401

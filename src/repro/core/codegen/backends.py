@@ -498,6 +498,9 @@ class VerilogPrinter(NetlistPrinter):
                     f"({step_up} >= {self.x(it.ub)});")
 
     def emit_instance(self, it: Instance, out, decls) -> None:
+        if it.share:
+            out.append(f"// time-shared x{1 + len(it.share)}: absorbs "
+                       f"{', '.join(self.n(s) for s in it.share)}")
         conns = ", ".join(
             f".{self.callee_port_name(it.module, p)}({self.x(e)})"
             for p, e, _o in it.conns)
@@ -1062,6 +1065,9 @@ class VHDLPrinter(NetlistPrinter):
                 self._aux.append(self.cond_assign(nm, e, w))
                 actual = nm
             maps.append(f"{formal} => {actual}")
+        if it.share:
+            out.append(f"-- time-shared x{1 + len(it.share)}: absorbs "
+                       f"{', '.join(self.n(s) for s in it.share)}")
         out.append(f"{self.n(it.inst)} : entity work.{self.mod(it.module)}"
                    f" port map ({', '.join(maps)});{self.loc_of(it)}")
 
@@ -1423,6 +1429,9 @@ class CIRCTPrinter(NetlistPrinter):
                f"({argtxt}) -> ({restxt})"
         if lhs:
             line = f"{lhs} = {line}"
+        if it.share:
+            out.append(f"// time-shared x{1 + len(it.share)}: absorbs "
+                       f"{', '.join(self.n(s) for s in it.share)}")
         out.append(line + self.loc_of(it))
 
     def emit_assert(self, it: PortConflictAssert, out, decls) -> None:
@@ -1564,14 +1573,19 @@ def _emit_module_payload(payload) -> tuple:
     strictly per-module, and (c) the design-wide module name map is rebuilt
     from the full ordered name list the parent passes in, so the printer's
     first-come legalization sees the same sequence."""
-    module_text, sidecar, target, order, hierarchy, rtl_spec, backend = payload
+    (module_text, sidecar, target, order, hierarchy, rtl_spec, backend,
+     entry) = payload
     from ..parser import parse
     from ..passmgr import PassManager
     from .verilog import lower_to_rtl, netlist_of
 
     m = parse(module_text)
     _attach_sidecar(m, sidecar)
-    design = lower_to_rtl(m, [target], hierarchy=hierarchy)
+    # the entry annotation gates the instance-sharing passes; a worker whose
+    # target is not the entry must not see one (its sub-design is rooted at
+    # a callee), matching what the serial pipeline does to that module
+    design = lower_to_rtl(m, [target], hierarchy=hierarchy,
+                          entry=entry if target == entry else None)
     if rtl_spec:
         PassManager.from_spec(rtl_spec).run(design)
     printer = get_printer(backend)
@@ -1583,7 +1597,7 @@ def _emit_module_payload(payload) -> tuple:
 
 def emit_design_parallel(module, order: list, hierarchy: str,
                          rtl_spec, backend: str,
-                         max_workers: int):
+                         max_workers: int, entry=None):
     """Emit the design's modules concurrently, one pool task per emitted
     module: each worker parses the printed post-pipeline module, lowers its
     target (plus, hierarchically, the callees the target instantiates), runs
@@ -1597,7 +1611,7 @@ def emit_design_parallel(module, order: list, hierarchy: str,
     text = print_module(module)
     sidecar = _module_sidecar(module)
     payloads = [(text, sidecar, t, tuple(order), hierarchy, rtl_spec or "",
-                 backend)
+                 backend, entry)
                 for t in order]
     return pool_map(_emit_module_payload, payloads, max_workers,
                     label="backend emission")

@@ -149,3 +149,49 @@ def report_design(mods: Mapping[str, VerilogModule],
     for n in roots:
         total = total + cost(n)
     return total
+
+
+def sharing_summary(mods: Mapping[str, VerilogModule],
+                    entry: Optional[str] = None) -> dict:
+    """Sharing-degree metadata to read alongside ``report_design``: per
+    callee module, how many physical time-multiplexed instances survived and
+    how many logical instances they absorbed.  ``report_design`` already
+    counts a shared instance once (the absorbed ``Instance`` items are gone
+    from the netlist); this surfaces *how much* logical hardware each
+    physical instance stands in for.
+
+    Returns ``{"per_module": {callee: {"physical": p, "logical": l,
+    "max_degree": d}}, "physical_instances": ..., "logical_instances": ...,
+    "absorbed": ...}`` — ``absorbed == 0`` means no sharing fired."""
+    names = [entry] if entry is not None else list(mods)
+    per: dict[str, dict] = {}
+    seen: set[str] = set()
+
+    def visit(name: str) -> None:
+        if name in seen:
+            return
+        seen.add(name)
+        vm = mods.get(name)
+        if vm is None:
+            return
+        degrees: dict[str, list[int]] = {}
+        for sub in vm.netlist.instances:
+            degrees.setdefault(sub, []).append(1)
+            visit(sub)
+        for sub, deg in vm.netlist.shared:
+            degrees[sub][degrees[sub].index(1)] = deg
+        for sub, ds in degrees.items():
+            row = per.setdefault(sub, {"physical": 0, "logical": 0,
+                                       "max_degree": 1})
+            row["physical"] += len(ds)
+            row["logical"] += sum(ds)
+            row["max_degree"] = max(row["max_degree"], max(ds))
+
+    for n in names:
+        visit(n)
+    return {
+        "per_module": per,
+        "physical_instances": sum(r["physical"] for r in per.values()),
+        "logical_instances": sum(r["logical"] for r in per.values()),
+        "absorbed": sum(r["logical"] - r["physical"] for r in per.values()),
+    }

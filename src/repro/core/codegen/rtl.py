@@ -659,15 +659,26 @@ class LoopController(Item):
 class Instance(Item):
     """A module instantiation.  ``conns`` is an ordered list of
     ``(port_name, expr, is_output)``: inputs take arbitrary expressions,
-    outputs must be ``Ref`` to a net this instance drives."""
+    outputs must be ``Ref`` to a net this instance drives.
 
-    __slots__ = ("module", "inst", "conns", "loc")
+    ``share_meta`` is stamped by the hierarchical lowering when the callee
+    module is a pure feed-forward pipeline with an all-scalar interface:
+    ``(result_delays, scalar_input_ports)`` with ports as ``(name, width)``
+    pairs.  Only stamped instances are candidates for
+    ``rtl-share-instances``/``rtl-arbitrate``; ``share`` lists the instance
+    names a merged (time-multiplexed) instance absorbed, so printers and the
+    resource model can surface the sharing degree."""
+
+    __slots__ = ("module", "inst", "conns", "share", "share_meta", "loc")
 
     def __init__(self, module: str, inst: str,
-                 conns: list[tuple[str, Expr, bool]], loc: Loc = UNKNOWN_LOC):
+                 conns: list[tuple[str, Expr, bool]], loc: Loc = UNKNOWN_LOC,
+                 share: tuple = (), share_meta: Optional[tuple] = None):
         self.module = module
         self.inst = inst
         self.conns = list(conns)
+        self.share = tuple(share)
+        self.share_meta = share_meta
         self.loc = loc
 
     def reads(self) -> Iterator[str]:
@@ -755,7 +766,9 @@ def clone_item(it: Item, ren: Optional[dict[str, str]] = None) -> Item:
         # because passes only rewrite *reads*; cloning relocates everything).
         conns = [(p, Ref(nn(e.name)) if is_out else ee(e), is_out)
                  for p, e, is_out in it.conns]
-        return Instance(it.module, nn(it.inst), conns, it.loc)
+        return Instance(it.module, nn(it.inst), conns, it.loc,
+                        share=tuple(nn(s) for s in it.share),
+                        share_meta=it.share_meta)
     if isinstance(it, PortConflictAssert):
         return PortConflictAssert(it.bus, [ee(e) for e in it.ens], it.loc)
     raise NotImplementedError(type(it).__name__)
@@ -1161,11 +1174,41 @@ class DeadNetElim(RTLPass):
 
         dead = {i for i in range(len(items)) if i not in live}
         if not dead:
+            self._audit_dangling(m)
             return n_pruned
         m.drop_items(dead)
         removed = n_pruned + len(dead) + m.prune_nets()
         self._invalidate(m)
+        self._audit_dangling(m)
         return removed
+
+    @staticmethod
+    def _audit_dangling(m: RTLModule) -> None:
+        """``REPRO_RTL_AUDIT=1``: assert no pass left a read-but-undriven net
+        or an undriven output port (the ``ControllerMerge`` ``iicnt`` bug
+        class).  The vectorized simulator deliberately ties undriven reads
+        to zero, which silently masks such bugs — this audit makes them loud
+        in debug/CI runs.  Runs after DCE so legitimately dead logic never
+        trips it."""
+        import os
+
+        if os.environ.get("REPRO_RTL_AUDIT", "0") in ("", "0"):
+            return
+        driven = {p.name for p in m.ports if p.dir == "input"}
+        driven.update(("clk", "rst"))
+        mems: set[str] = set()
+        for it in m.items:
+            driven.update(it.writes())
+            if isinstance(it, Memory):
+                mems.add(it.name)
+        dangling = sorted({r for it in m.items for r in it.reads()
+                           if r not in driven})
+        undriven_out = sorted(p.name for p in m.ports
+                              if p.dir == "output" and p.name not in driven)
+        if dangling or undriven_out:
+            raise AssertionError(
+                f"rtl-dce audit: module {m.name!r} reads undriven nets "
+                f"{dangling}; undriven output ports {undriven_out}")
 
     def _invalidate(self, m: RTLModule) -> None:
         if self.am is not None:
@@ -1385,10 +1428,232 @@ class MemReadShare(RTLPass):
         return n
 
 
+def _instance_conn_maps(it: Instance) -> tuple[dict, dict]:
+    """(inputs, outputs) port-name -> expr maps of one instance."""
+    ins: dict[str, Expr] = {}
+    outs: dict[str, Expr] = {}
+    for p, e, is_out in it.conns:
+        (outs if is_out else ins)[p] = e
+    return ins, outs
+
+
+class _InstanceMergeBase(RTLPass):
+    """Shared machinery of ``rtl-share-instances`` / ``rtl-arbitrate``: merge
+    k instances of one feed-forward callee into a single physical instance
+    behind a time-division mux tree.  Operands are selected by the firing
+    member's activation pulse (first member in program order wins on the
+    priority chain), the shared activation is the OR of the member pulses,
+    and every member keeps its *own* result/valid nets: results alias the
+    shared output (the member only samples it at its own firing time),
+    valids are re-derived from the member's own pulse delayed by the
+    callee's declared result latency through the existing ``ShiftReg``
+    machinery.
+
+    Both passes are **entry-module only**: the design entry is invoked
+    exactly once, so instance pulse sets are absolute cycle schedules.  A
+    non-entry module can be re-invoked while a previous invocation is still
+    in flight (e.g. a pipelined caller at II=1), which would overlay the
+    relative pulse sets unpredictably — sharing there is unsound."""
+
+    #: name prefix of the nets the merge introduces (per subclass, so a
+    #: share-merged lead can later be arbitrate-merged without collisions)
+    net_tag = "sh"
+    #: arbitrated merges add the §4.5 ``PortConflictAssert`` residual guard
+    arbitrated = False
+
+    def run(self, design) -> int:
+        _ensure_recursion_headroom()
+        if not isinstance(design, RTLDesign) or not design.entry:
+            return 0  # no proven single-invocation root: nothing to share
+        m = design.modules.get(design.entry)
+        return 0 if m is None else self.run_module(m)
+
+    def run_module(self, m: RTLModule) -> int:
+        from ..analysis import ActivationIntervalsAnalysis
+
+        cands: dict[str, list[tuple[int, Instance]]] = {}
+        for i, it in enumerate(m.items):
+            if isinstance(it, Instance) and it.share_meta is not None:
+                cands.setdefault(it.module, []).append((i, it))
+        n = 0
+        drop: set[int] = set()
+        ai = None
+        for _callee, insts in cands.items():
+            if len(insts) < 2:
+                continue
+            if ai is None:
+                ai = self.get_analysis(ActivationIntervalsAnalysis, m)
+            for group in self._group(ai, insts):
+                if len(group) < 2:
+                    continue
+                self._merge(m, group)
+                drop.update(i for i, _ in group[1:])
+                n += len(group) - 1
+        if n:
+            m.drop_items(drop)
+            m.prune_nets()
+            if self.am is not None:
+                self.am.invalidate(func=m)
+        return n
+
+    @staticmethod
+    def _pulse_of(ai, it: Instance):
+        ts = _instance_conn_maps(it)[0].get("t_start")
+        return None if ts is None else ai.of_expr(ts)
+
+    def _group(self, ai, insts: list) -> list[list]:
+        raise NotImplementedError
+
+    def _merge(self, m: RTLModule, group: list[tuple[int, Instance]]) -> None:
+        lead = group[0][1]
+        delays, in_ports, out_widths = lead.share_meta
+        members = [it for _, it in group]
+        cmaps = [_instance_conn_maps(it) for it in members]
+        ts_exprs = [c[0]["t_start"] for c in cmaps]
+        base, tag = lead.inst, self.net_tag
+
+        def fold_first_wins(values: list, width: int) -> Expr:
+            v = values[-1]
+            for te, mv in zip(reversed(ts_exprs[:-1]), reversed(values[:-1])):
+                v = Mux(te, mv, v, width)
+            return v
+
+        ts = ts_exprs[0]
+        for e in ts_exprs[1:]:
+            ts = Binop("|", ts, e, width=1, free=True)
+        tsnet = m.new_net(f"{base}_{tag}_ts", 1)
+        new_items: list[Item] = [CombAssign(tsnet, ts, loc=lead.loc)]
+        conns: list[tuple[str, Expr, bool]] = [
+            ("clk", Ref("clk"), False), ("rst", Ref("rst"), False),
+            ("t_start", Ref(tsnet), False)]
+        for pname, width in in_ports:
+            pnet = m.new_net(f"{base}_{tag}_{pname}", width)
+            new_items.append(CombAssign(
+                pnet, fold_first_wins([c[0][pname] for c in cmaps], width),
+                loc=lead.loc))
+            conns.append((pname, Ref(pnet), False))
+        for ri, d in enumerate(delays):
+            rnet = m.new_net(f"{base}_{tag}_r{ri}", out_widths[ri])
+            vnet = m.new_net(f"{base}_{tag}_v{ri}", 1)
+            conns.append((f"result_{ri}", Ref(rnet), True))
+            conns.append((f"result_{ri}_valid", Ref(vnet), True))
+            for c, te in zip(cmaps, ts_exprs):
+                mr = c[1][f"result_{ri}"].name
+                mv = c[1][f"result_{ri}_valid"].name
+                new_items.append(CombAssign(mr, Ref(rnet), loc=lead.loc))
+                if d > 0:
+                    new_items.append(ShiftReg(mv, te, 1, d, reset_zero=True,
+                                              loc=lead.loc))
+                else:
+                    new_items.append(CombAssign(mv, te, loc=lead.loc))
+        lead.conns = conns
+        lead.share = lead.share + tuple(
+            s for it in members[1:] for s in (it.inst,) + it.share)
+        if self.arbitrated:
+            new_items.append(PortConflictAssert(tsnet, list(ts_exprs),
+                                                loc=lead.loc))
+        m.items.extend(new_items)
+
+
+@register_pass
+class ShareInstances(_InstanceMergeBase):
+    """Cross-instance time-multiplexing (the paper's §4.4 resource story at
+    module granularity): instances of one callee whose ``activation-intervals``
+    pulse sets are finite and pairwise disjoint provably never compute in the
+    same cycle, so they fold onto one physical instance.  Deterministic
+    first-fit greedy packing in program order."""
+
+    name = "rtl-share-instances"
+    net_tag = "sh"
+
+    def _group(self, ai, insts: list) -> list[list]:
+        groups: list[list] = []  # [union_pulses, members...]
+        for i, it in insts:
+            p = self._pulse_of(ai, it)
+            if p is None:
+                continue  # unknown schedule: rtl-arbitrate's problem
+            for g in groups:
+                if not (g[0] & p):
+                    g[0] = g[0] | p
+                    g.append((i, it))
+                    break
+            else:
+                groups.append([p, (i, it)])
+        return [g[1:] for g in groups]
+
+
+@register_pass
+class ArbitrateInstances(_InstanceMergeBase):
+    """II-aware arbitration — sharing that degrades gracefully when pulses
+    *can* coincide.  Two jobs:
+
+    1. prune ``PortConflictAssert`` guards whose enables are finite and
+       pairwise disjoint (the analysis discharged the §4.5 obligation
+       statically, so the runtime monitor is dead weight);
+    2. merge same-callee instances whose pulse schedules the analysis could
+       *not* bound (TOP) behind a static-priority arbiter (first instance in
+       program order wins the operand mux) with a ``PortConflictAssert`` on
+       the shared activation guarding the residual §4.5 condition.
+       Instances with structurally identical activation pulses provably
+       coincide every firing and are left alone."""
+
+    name = "rtl-arbitrate"
+    net_tag = "arb"
+    arbitrated = True
+
+    def run_module(self, m: RTLModule) -> int:
+        return self._prune_proven_asserts(m) + super().run_module(m)
+
+    def _prune_proven_asserts(self, m: RTLModule) -> int:
+        from ..analysis import ActivationIntervalsAnalysis
+
+        drop: set[int] = set()
+        ai = None
+        for i, it in enumerate(m.items):
+            if not isinstance(it, PortConflictAssert):
+                continue
+            if ai is None:
+                ai = self.get_analysis(ActivationIntervalsAnalysis, m)
+            sets = [ai.of_expr(e) for e in it.ens]
+            if any(s is None for s in sets):
+                continue
+            union: frozenset = frozenset()
+            total = 0
+            for s in sets:
+                union |= s
+                total += len(s)
+            if total == len(union):  # pairwise disjoint: can never trip
+                drop.add(i)
+        if drop:
+            m.drop_items(drop)
+            m.prune_nets()
+            if self.am is not None:
+                self.am.invalidate(func=m)
+        return len(drop)
+
+    def _group(self, ai, insts: list) -> list[list]:
+        group: list = []
+        keys: set[int] = set()
+        for i, it in insts:
+            if self._pulse_of(ai, it) is not None:
+                continue  # bounded schedules are rtl-share-instances' job
+            ts = _instance_conn_maps(it)[0].get("t_start")
+            k = ts.key() if ts is not None else None
+            if k is None or k in keys:
+                continue  # identical pulse nets fire together: never share
+            keys.add(k)
+            group.append((i, it))
+        return [group]
+
+
 #: Default post-lowering RTL pipeline.  Controller merging first (it unifies
 #: induction-variable nets, which makes address/compute expressions
 #: structurally equal), then comb-expression sharing, then the broadcast
-#: read share (now that addresses are unified), shift-register merging, and
-#: a final dead-net sweep.  The PassManager's fixpoint loop re-runs the
-#: sequence while any pass still fires.
-RTL_PIPELINE_SPEC = "rtl-merge-ctrl,rtl-share-comb,rtl-share-mem,rtl-merge-srl,rtl-dce"
+#: read share (now that addresses are unified), shift-register merging, then
+#: cross-instance time-multiplexing (proven-disjoint pulses) and the
+#: II-aware arbitration fallback, and a final dead-net sweep.  The
+#: PassManager's fixpoint loop re-runs the sequence while any pass still
+#: fires.
+RTL_PIPELINE_SPEC = ("rtl-merge-ctrl,rtl-share-comb,rtl-share-mem,"
+                     "rtl-merge-srl,rtl-share-instances,rtl-arbitrate,"
+                     "rtl-dce")

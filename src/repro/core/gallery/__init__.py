@@ -15,7 +15,8 @@ harness — differential RTL sim, backend conformance, DSE — exercises the
 traced path alongside the hand-scheduled kernels.
 """
 
-from . import array_add, conv2d, fifo, gemm, histogram, mac, stencil1d, transpose
+from . import (array_add, conv2d, fifo, gemm, gemm_shared, histogram, mac,
+               stencil1d, transpose)
 from ..frontend.workloads import (frontend_matmul, frontend_scan,
                                   frontend_softmax_row)
 
@@ -24,6 +25,7 @@ GALLERY = {
     "stencil1d": stencil1d,
     "histogram": histogram,
     "gemm": gemm,
+    "gemm_shared": gemm_shared,
     "conv2d": conv2d,
     "fifo": fifo,
     "array_add": array_add,

@@ -18,12 +18,12 @@ hit/miss stats; ``REPRO_HLS_CACHE=0`` disables them globally.
 
 **The explorer** — ``explore_design(module, space)`` sweeps
 :class:`DSEConfig` candidates (pipeline on/off, min II, clock budget,
-unroll stagger, bank merging) on a ``concurrent.futures`` process pool
-(gracefully serial at ``max_workers=1`` — deterministic output either way),
-scores each point with the simulator's cycle count against
-``report_design``'s LUT/FF, verifies each candidate's simulation output
+unroll stagger, bank merging, instance sharing) on a ``concurrent.futures``
+process pool (gracefully serial at ``max_workers=1`` — deterministic output
+either way), scores each point with the simulator's cycle count against
+``report_design``'s LUT/FF/DSP, verifies each candidate's simulation output
 against an expected oracle array, and returns the Pareto frontier over
-(latency_ns, LUT, FF).
+(latency_ns, LUT, FF, DSP).
 """
 
 from __future__ import annotations
@@ -78,8 +78,9 @@ class _StructuralNamer(_Namer):
 # Bump whenever scheduling or codegen *semantics* change: fingerprints are
 # the keys of the persistent DiskCompileCache, so entries produced by an
 # older compiler must miss rather than resurrect its output (e.g. the
-# result-delay reconciliation fix changed every schedule containing calls).
-CACHE_SCHEMA = 2
+# result-delay reconciliation fix changed every schedule containing calls;
+# schema 3: the instance-sharing RTL passes rewrite hierarchical netlists).
+CACHE_SCHEMA = 3
 
 
 def fingerprint_func(f: FuncOp, extra: tuple = ()) -> str:
@@ -300,7 +301,14 @@ class DSEConfig:
     (perfect-nest loop swap) and ``partition`` (minimum local-RAM bank
     count, 0/1 = off) are *pre-schedule structural* knobs applied by
     :func:`apply_structural_knobs`; interchange is speculative and relies on
-    the sweep's sim-verification to score out illegal swaps."""
+    the sweep's sim-verification to score out illegal swaps.
+
+    ``share_instances`` is a *codegen* knob: emit hierarchically
+    (``hierarchy="modules"``) so the ``rtl-share-instances`` /
+    ``rtl-arbitrate`` passes can fold schedule-disjoint callee instances
+    onto shared physical hardware — trading nothing at the schedule level
+    (latency is fixed by the schedule) for fewer DSP/LUT when the
+    ``activation-intervals`` analysis proves the pulses disjoint."""
 
     pipeline: bool = True
     min_ii: int = 1
@@ -310,6 +318,7 @@ class DSEConfig:
     tile: int = 0
     interchange: bool = False
     partition: int = 0
+    share_instances: bool = False
 
     def scheduler_options(self) -> SchedulerOptions:
         return SchedulerOptions(pipeline_loops=self.pipeline,
@@ -322,7 +331,8 @@ class DSEConfig:
                 "unroll_parallel": self.unroll_parallel,
                 "merge_banks": self.merge_banks, "tile": self.tile,
                 "interchange": self.interchange,
-                "partition": self.partition}
+                "partition": self.partition,
+                "share_instances": self.share_instances}
 
 
 def design_space(pipeline: Sequence[bool] = (True, False),
@@ -332,7 +342,8 @@ def design_space(pipeline: Sequence[bool] = (True, False),
                  merge_banks: Sequence[bool] = (False,),
                  tile: Sequence[int] = (0,),
                  interchange: Sequence[bool] = (False,),
-                 partition: Sequence[int] = (0,)) -> list[DSEConfig]:
+                 partition: Sequence[int] = (0,),
+                 share_instances: Sequence[bool] = (False,)) -> list[DSEConfig]:
     """Cartesian product of the knob axes, with redundant points removed
     (``min_ii`` only matters when pipelining; ``partition`` fights
     ``merge_banks``, so the merged+partitioned combination is dropped), in
@@ -347,10 +358,12 @@ def design_space(pipeline: Sequence[bool] = (True, False),
                         for t in tile:
                             for ic in interchange:
                                 for pt in (partition if not mb else (0,)):
-                                    c = DSEConfig(p, mi, ck, up, mb, t, ic, pt)
-                                    if c not in seen:
-                                        seen.add(c)
-                                        out.append(c)
+                                    for sh in share_instances:
+                                        c = DSEConfig(p, mi, ck, up, mb, t,
+                                                      ic, pt, sh)
+                                        if c not in seen:
+                                            seen.add(c)
+                                            out.append(c)
     return out
 
 
@@ -465,11 +478,15 @@ class DSEPoint:
     #: schedule-only estimates it was ranked by.
     pruned: bool = False
     est: Optional[dict] = None
+    #: logical instances absorbed onto shared physical hardware by
+    #: ``rtl-share-instances``/``rtl-arbitrate`` (0 unless the candidate's
+    #: ``share_instances`` knob is on and the schedule proved disjointness).
+    shared_absorbed: int = 0
 
     def objectives(self) -> Optional[tuple]:
         if self.latency_ns is None or self.error is not None:
             return None
-        return (self.latency_ns, self.lut, self.ff)
+        return (self.latency_ns, self.lut, self.ff, self.dsp)
 
     def as_dict(self) -> dict:
         return {"config": self.config.as_dict(),
@@ -480,7 +497,8 @@ class DSEPoint:
                 "verified": self.verified, "error": self.error,
                 "batch_verified": self.batch_verified,
                 "batch_vectors": self.batch_vectors,
-                "pruned": self.pruned, "est": self.est}
+                "pruned": self.pruned, "est": self.est,
+                "shared_absorbed": self.shared_absorbed}
 
 
 def dominates(a: tuple, b: tuple) -> bool:
@@ -489,8 +507,11 @@ def dominates(a: tuple, b: tuple) -> bool:
 
 
 def pareto_front(points: Sequence[DSEPoint]) -> list[DSEPoint]:
-    """Non-dominated verified points over (latency_ns, LUT, FF), one per
-    distinct objective vector, sorted by latency then area."""
+    """Non-dominated verified points over (latency_ns, LUT, FF, DSP), one
+    per distinct objective vector, sorted by latency then area.  DSP is a
+    first-class objective so a time-multiplexed candidate (same schedule,
+    fewer multipliers) survives next to its fully-spatial sibling as a
+    genuine latency-vs-DSP tradeoff point."""
     usable = [p for p in points if p.verified and p.objectives() is not None]
     front: list[DSEPoint] = []
     seen_obj = set()
@@ -527,12 +548,21 @@ def _evaluate_candidate(payload) -> dict:
         spec = DEFAULT_PIPELINE_SPEC if pipeline_spec is None else pipeline_spec
         if spec:
             PassManager.from_spec(spec).run(m)
-        vs = generate_verilog(m, entry=entry)
+        # share_instances needs the call hierarchy preserved as Instances
+        # for rtl-share-instances/rtl-arbitrate to merge; latency is a
+        # schedule property and unaffected by the emission policy.
+        hier = "modules" if config.share_instances else "inline"
+        vs = generate_verilog(m, entry=entry, hierarchy=hier)
         rep = report_design(vs, entry=entry)
+        absorbed = 0
+        if config.share_instances:
+            from ..codegen.resources import sharing_summary
+            absorbed = sharing_summary(vs, entry=entry)["absorbed"]
         point = {"config": config, "iis": dict(res.iis),
                  "lut": rep.lut, "ff": rep.ff, "dsp": rep.dsp,
                  "bram": rep.bram, "latency_cycles": None,
-                 "latency_ns": None, "verified": False, "error": None}
+                 "latency_ns": None, "verified": False, "error": None,
+                 "shared_absorbed": absorbed}
         if inputs is not None:
             args = [np.array(a, copy=True) if isinstance(a, np.ndarray) else a
                     for a in inputs]
@@ -667,9 +697,11 @@ def _cheap_score_candidate(payload) -> dict:
 
 def _rank_candidates(rows: list[dict]) -> list[float]:
     """Non-dominated-sorting rank of cheap-score rows over
-    (est_latency_ns, est_lut, est_ff): rank 0 = estimated Pareto front,
-    rank 1 = front after removing rank 0, ...; errored rows rank last."""
-    objs = {i: (r["est_latency_ns"], r["est_lut"], r["est_ff"])
+    (est_latency_ns, est_lut, est_ff, est_dsp): rank 0 = estimated Pareto
+    front, rank 1 = front after removing rank 0, ...; errored rows rank
+    last."""
+    objs = {i: (r["est_latency_ns"], r["est_lut"], r["est_ff"],
+                r["est_dsp"])
             for i, r in enumerate(rows) if r.get("error") is None}
     rank = [math.inf] * len(rows)
     remaining = set(objs)
@@ -705,7 +737,8 @@ def _row_to_point(r: dict) -> DSEPoint:
     return DSEPoint(config=r["config"], latency_cycles=r["latency_cycles"],
                     latency_ns=r["latency_ns"], lut=r["lut"], ff=r["ff"],
                     dsp=r["dsp"], bram=r["bram"], iis=r["iis"],
-                    verified=r["verified"], error=r["error"])
+                    verified=r["verified"], error=r["error"],
+                    shared_absorbed=r.get("shared_absorbed", 0))
 
 
 def explore_design(module: Module, space: Sequence[DSEConfig],
@@ -723,7 +756,7 @@ def explore_design(module: Module, space: Sequence[DSEConfig],
     (:func:`oracle_expected`) — structurally identical source modules never
     re-trace.  Candidates run on a process pool when ``max_workers > 1``
     (serial fallback is byte-identical).  Returns every scored point plus
-    the Pareto frontier over (latency_ns, LUT, FF).
+    the Pareto frontier over (latency_ns, LUT, FF, DSP).
 
     ``strategy="halving"`` enables successive halving: every candidate gets
     a cheap schedule-only score (:func:`_cheap_score_candidate` — the

@@ -6,8 +6,8 @@ import pytest
 
 bench_run = pytest.importorskip("benchmarks.run")
 
-ALL = ("codegen_speed,codegen_scaling,dse,resource_usage,precision_opt,"
-       "roofline,sim_throughput")
+ALL = ("codegen_speed,codegen_scaling,dse,incremental,resource_usage,"
+       "precision_opt,roofline,sim_throughput,sharing")
 
 
 def test_split_opt_consumes_both_forms():

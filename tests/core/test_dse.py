@@ -73,7 +73,21 @@ def test_pareto_front_filters_and_sorts():
     ]
     front = pareto_front(pts)
     assert [p.objectives() for p in front] == [
-        (50.0, 90, 90), (100.0, 40, 40), (200.0, 10, 10)]
+        (50.0, 90, 90, 0), (100.0, 40, 40, 0), (200.0, 10, 10, 0)]
+
+
+def test_pareto_front_keeps_dsp_tradeoff():
+    """Same latency/LUT/FF but fewer DSPs (a time-multiplexed candidate)
+    must survive as a distinct frontier point — DSP is a real objective."""
+    a = _pt(100, 40, 40)
+    a.dsp = 48
+    b = _pt(120, 40, 40)          # slower ...
+    b.dsp = 3                     # ... but 16x fewer multipliers
+    front = pareto_front([a, b])
+    assert len(front) == 2
+    c = _pt(100, 40, 40)
+    c.dsp = 3                     # dominates a outright (equal lat, less dsp)
+    assert pareto_front([a, c]) == [c]
 
 
 def test_design_space_dedups_min_ii_when_sequential():

@@ -15,8 +15,8 @@ import pytest
 
 from repro.core.codegen import sim as rsim
 from repro.core.codegen.rtl import Binop, Const, Ref, Signed
-from repro.core.gallery import (array_add, conv2d, fifo, gemm, histogram, mac,
-                                stencil1d, transpose)
+from repro.core.gallery import (array_add, conv2d, fifo, gemm, gemm_shared,
+                                histogram, mac, stencil1d, transpose)
 from repro.core.lower import simulate_batch
 
 N_VECTORS = 256
@@ -26,6 +26,9 @@ KERNELS = {
     "array_add": (array_add, {"n": 8}, {"n": 8}, array_add.oracle, 2),
     "transpose": (transpose, {"n": 4}, {"n": 4}, transpose.oracle, 1),
     "gemm": (gemm, {"n": 4}, {"n": 4}, gemm.oracle, 2),
+    # column-staggered II=n schedule: its hierarchical emission exercises
+    # rtl-share-instances' time-division muxes under the full matrix
+    "gemm_shared": (gemm_shared, {"n": 4}, {"n": 4}, gemm_shared.oracle, 2),
     "stencil1d": (stencil1d, {"n": 8}, {"n": 8}, stencil1d.oracle, 1),
     "conv2d": (conv2d, {"h": 6, "w": 6}, {"h": 6, "w": 6}, conv2d.oracle, 1),
     "histogram": (histogram, {"n": 8, "bins": 4}, {"n": 8, "bins": 4},

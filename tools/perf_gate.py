@@ -15,6 +15,13 @@ The schema is detected from the payload:
     size, ``warm_reedit_s`` within tolerance, plus the machine-independent
     correctness flags: ``byte_identical`` and ``emit_equal`` must hold and
     ``reedit_speedup`` must stay above ``--speedup-floor``.
+  * ``BENCH_sharing.json`` (``{"sharing": [...]}``) — machine-independent
+    only: every differentially-verified row must be green and lint clean on
+    all four backends, shared designs may never cost more DSPs than their
+    unshared emission, at least one row must reach a time-division degree of
+    ``--share-floor``, the DSE sweep must keep at least one time-multiplexed
+    Pareto point, and per matching (kernel, hierarchy, size) row the
+    absorbed-instance count must not drop below the baseline's.
 
 Only rows present in both files are gated (CI runs smaller sweeps than the
 committed full-run baselines), and the tolerance is deliberately loose —
@@ -80,6 +87,45 @@ def _gate_incremental(fresh: dict, base: dict, tol: float,
     return bad
 
 
+def _gate_sharing(fresh: dict, base: dict, share_floor: int) -> list[str]:
+    bad = []
+    br = {(r["kernel"], r["hierarchy"], repr(sorted(r["size"].items()))): r
+          for r in base["sharing"]}
+    best_degree = 0
+    for r in fresh["sharing"]:
+        key = (r["kernel"], r["hierarchy"], repr(sorted(r["size"].items())))
+        tag = f"{r['kernel']}[{r['hierarchy']}] {r['size']}"
+        ok = True
+        if r["verified"] is False:   # None = resources-only row, not swept
+            bad.append(f"{tag}: differential verification failed")
+            ok = False
+        unlinted = [be for be, lint_ok in r["lint_ok"].items() if not lint_ok]
+        if unlinted:
+            bad.append(f"{tag}: lint failures on {', '.join(unlinted)}")
+            ok = False
+        if r["after"]["DSP"] > r["before"]["DSP"]:
+            bad.append(f"{tag}: sharing RAISED DSPs "
+                       f"({r['before']['DSP']} -> {r['after']['DSP']})")
+            ok = False
+        b = br.get(key)
+        if b is not None and r["absorbed"] < b["absorbed"]:
+            bad.append(f"{tag}: absorbed {r['absorbed']} < baseline "
+                       f"{b['absorbed']} — sharing regressed")
+            ok = False
+        best_degree = max(best_degree, r["max_degree"])
+        print(f"  {tag}: dsp {r['before']['DSP']}->{r['after']['DSP']}, "
+              f"absorbed {r['absorbed']} (x{r['max_degree']}), "
+              f"verified={r['verified']}: "
+              f"{'ok' if ok else 'REGRESSION'}")
+    if best_degree < share_floor:
+        bad.append(f"best time-division degree {best_degree} < "
+                   f"floor {share_floor} — the analysis stopped proving "
+                   f"disjointness")
+    if not fresh.get("dse", {}).get("sharing_points"):
+        bad.append("DSE frontier lost its time-multiplexed Pareto point")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fresh", required=True, help="freshly produced artifact")
@@ -88,6 +134,8 @@ def main(argv=None) -> int:
                     help="allowed slowdown factor vs baseline (default 5)")
     ap.add_argument("--speedup-floor", type=float, default=5.0,
                     help="minimum warm-reedit speedup (incremental schema)")
+    ap.add_argument("--share-floor", type=int, default=4,
+                    help="minimum best time-division degree (sharing schema)")
     args = ap.parse_args(argv)
 
     fresh = json.loads(Path(args.fresh).read_text())
@@ -99,6 +147,8 @@ def main(argv=None) -> int:
     elif "reedit" in fresh and "reedit" in base:
         bad = _gate_incremental(fresh, base, args.tolerance,
                                 args.speedup_floor)
+    elif "sharing" in fresh and "sharing" in base:
+        bad = _gate_sharing(fresh, base, args.share_floor)
     else:
         print("unrecognized or mismatched artifact schemas")
         return 2
